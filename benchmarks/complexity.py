@@ -1,0 +1,164 @@
+"""The paper's complexity model (Tables 2, 3, 5): time/space per
+generalized-linear layer for every DP implementation, plus whole-model
+aggregation used by table8/table10 reproductions.
+
+Layer = (T, d, p) with batch B; units are FLOPs-ish "time complexity" counts
+and array elements for space, exactly as the paper counts them.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+Layer = Tuple[int, int, int]  # (T, d, p)
+
+
+# -------------------------------------------------- per-layer time complexity
+def t_nondp(B, T, d, p):
+    return 6 * B * T * p * d
+
+
+def t_opacus(B, T, d, p):
+    return 8 * B * T * p * d
+
+
+def t_fastgradclip(B, T, d, p):
+    return 8 * B * T * p * d
+
+
+def t_ghostclip(B, T, d, p):
+    return 10 * B * T * p * d + 2 * B * T * T * (p + d)
+
+
+def t_bk(B, T, d, p):
+    return 6 * B * T * p * d + 2 * B * T * T * (p + d)
+
+
+def t_mixghostclip(B, T, d, p):
+    return 8 * B * T * p * d + min(2 * B * T * p * d, 2 * B * T * T * (p + d))
+
+
+def t_bk_mixghostclip(B, T, d, p):
+    return 6 * B * T * p * d + min(2 * B * T * p * d, 2 * B * T * T * (p + d))
+
+
+def t_bk_mixopt(B, T, d, p):
+    ghost = 2 * T * T < p * d
+    return 6 * B * T * p * d + (2 * B * T * T * (p + d) if ghost else 2 * B * p * d)
+
+
+# ------------------------------------------------- per-layer space complexity
+def s_nondp(B, T, d, p):
+    return p * d + 3 * B * T * d + B * T * p
+
+
+def s_extra_opacus(B, T, d, p):
+    return B * p * d
+
+
+s_extra_fastgradclip = s_extra_opacus
+
+
+def s_extra_ghost(B, T, d, p):
+    return 2 * B * T * T
+
+
+def s_extra_mixed(B, T, d, p):
+    return min(2 * B * T * T, B * p * d)
+
+
+TIME = {"nonDP": t_nondp, "Opacus": t_opacus, "FastGradClip": t_fastgradclip,
+        "GhostClip": t_ghostclip, "BK": t_bk, "MixGhostClip": t_mixghostclip,
+        "BK-MixGhostClip": t_bk_mixghostclip, "BK-MixOpt": t_bk_mixopt}
+SPACE_EXTRA = {"nonDP": lambda *a: 0, "Opacus": s_extra_opacus,
+               "FastGradClip": s_extra_fastgradclip,
+               "GhostClip": s_extra_ghost, "BK": s_extra_ghost,
+               "MixGhostClip": s_extra_mixed, "BK-MixGhostClip": s_extra_mixed,
+               "BK-MixOpt": s_extra_mixed}
+
+
+def model_time(layers: List[Layer], B: int, impl: str) -> float:
+    return float(sum(TIME[impl](B, T, d, p) for T, d, p in layers))
+
+
+def model_space(layers: List[Layer], B: int, impl: str) -> float:
+    base = sum(s_nondp(B, T, d, p) for T, d, p in layers)
+    return float(base + sum(SPACE_EXTRA[impl](B, T, d, p) for T, d, p in layers))
+
+
+def clip_norm_space(layers: List[Layer], B: int, impl: str) -> float:
+    """Space of computing per-sample grad norms only (Tables 4/10)."""
+    if impl == "ghost":
+        return float(sum(2 * B * T * T for T, d, p in layers))
+    if impl == "instantiate":
+        return float(sum(B * p * d for T, d, p in layers))
+    if impl == "mixed":
+        return float(sum(min(2 * B * T * T, B * p * d) for T, d, p in layers))
+    raise ValueError(impl)
+
+
+# ----------------------------------------------------------- model descriptors
+def transformer_layers(n_layers: int, d: int, T: int, vocab: int,
+                       d_ff: int = 0, fused_qkv: bool = False) -> List[Layer]:
+    """Generalized-linear layers of a GPT2/BERT-style block stack + embeddings
+    (embedding ghost-norm T^2 term counted like a linear layer, following the
+    paper's Appendix B treatment)."""
+    ff = d_ff or 4 * d
+    per_block: List[Layer] = (
+        [(T, d, 3 * d)] if fused_qkv else [(T, d, d)] * 3)
+    per_block += [(T, d, d), (T, d, ff), (T, ff, d)]
+    layers = per_block * n_layers
+    layers += [(T, vocab, d), (T, d, vocab)]   # embed + lm head
+    return layers
+
+
+MODELS = {
+    # name: (n_layers, d_model, vocab, d_ff)
+    "roberta-base": (12, 768, 50265, 3072),
+    "roberta-large": (24, 1024, 50265, 4096),
+    "vit-base": (12, 768, 1000, 3072),
+    "vit-large": (24, 1024, 1000, 4096),
+    "beit-large": (24, 1024, 1000, 4096),
+    "gpt2-small": (12, 768, 50257, 3072),
+    "gpt2-medium": (24, 1024, 50257, 4096),
+    "gpt2-large": (36, 1280, 50257, 5120),
+}
+
+
+def conv_layer(h_out: int, in_c: int, out_c: int, k: int) -> Layer:
+    return (h_out * h_out, in_c * k * k, out_c)
+
+
+def resnet18_layers(img: int = 224) -> List[Layer]:
+    s = img // 224  # scale the feature maps with input resolution
+    m = lambda r: r * s
+    L = [conv_layer(m(112), 3, 64, 7)]
+    L += [conv_layer(m(56), 64, 64, 3)] * 4
+    L += [conv_layer(m(28), 64, 128, 3)] + [conv_layer(m(28), 128, 128, 3)] * 3
+    L += [conv_layer(m(14), 128, 256, 3)] + [conv_layer(m(14), 256, 256, 3)] * 3
+    L += [conv_layer(m(7), 256, 512, 3)] + [conv_layer(m(7), 512, 512, 3)] * 3
+    L += [(1, 512, 1000)]
+    return L
+
+
+def vgg11_layers(img: int = 224) -> List[Layer]:
+    s = img // 224
+    m = lambda r: r * s
+    return [
+        conv_layer(m(224), 3, 64, 3),
+        conv_layer(m(112), 64, 128, 3),
+        conv_layer(m(56), 128, 256, 3), conv_layer(m(56), 256, 256, 3),
+        conv_layer(m(28), 256, 512, 3), conv_layer(m(28), 512, 512, 3),
+        conv_layer(m(14), 512, 512, 3), conv_layer(m(14), 512, 512, 3),
+        (1, 25088, 4096), (1, 4096, 4096), (1, 4096, 1000),
+    ]
+
+
+def vit_patch_layers(n_layers: int, d: int, img: int = 224,
+                     patch: int = 16) -> List[Layer]:
+    T = (img // patch) ** 2 + 1
+    layers: List[Layer] = [((img // patch) ** 2, 3 * patch * patch, d)]
+    # timm ViTs use a fused qkv linear — matches the paper's layer counting
+    layers += transformer_layers(n_layers, d, T, 1000, fused_qkv=True)[:-2]
+    layers += [(1, d, 1000)]
+    return layers

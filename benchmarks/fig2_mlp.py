@@ -1,0 +1,66 @@
+"""Reproduce paper Figure 2 / Figure 9 (measured): MLP speed and memory for
+every DP implementation. Wall-time measured on this host; memory from the
+compiled module's buffer assignment (argument+temp bytes), which is the
+hardware-independent analogue of the paper's GPU memory axis."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bk import DPConfig
+from repro.core.engine import ALL_MODES, make_grad_fn
+from repro.models.mlp import MLP, MLPConfig
+
+CONFIGS = {
+    "deep": MLPConfig(d_in=128, width=256, depth=20, n_classes=10),
+    "shallow": MLPConfig(d_in=128, width=256, depth=6, n_classes=10),
+    "wide": MLPConfig(d_in=128, width=1024, depth=6, n_classes=10),
+}
+B = 64
+MODES = ["nonprivate", "opacus", "fastgradclip", "ghostclip", "bk",
+         "bk-mixghost", "bk-mixopt"]  # tfprivacy omitted: B sequential bwds
+
+
+def bench_one(cfg: MLPConfig, mode: str, iters: int = 5):
+    model = MLP(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"x": jax.random.normal(jax.random.PRNGKey(1), (B, cfg.d_in)),
+             "y": jax.random.randint(jax.random.PRNGKey(2), (B,), 0,
+                                     cfg.n_classes)}
+    fn = jax.jit(make_grad_fn(model.apply, DPConfig(mode=mode, sigma=0.5)))
+    lowered = fn.lower(params, batch, jax.random.PRNGKey(3))
+    compiled = lowered.compile()
+    ma = compiled.memory_analysis()
+    mem = ma.argument_size_in_bytes + ma.temp_size_in_bytes
+    out = fn(params, batch, jax.random.PRNGKey(3))
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(params, batch, jax.random.PRNGKey(3))
+    jax.block_until_ready(out)
+    us = (time.perf_counter() - t0) / iters * 1e6
+    return us, mem
+
+
+def main(emit=print):
+    emit("# Fig 2 (measured): MLP grad step, us/call and compiled bytes")
+    results = {}
+    for cname, cfg in CONFIGS.items():
+        for mode in MODES:
+            us, mem = bench_one(cfg, mode)
+            results[(cname, mode)] = (us, mem)
+            emit(f"fig2_{cname}_{mode},{us:.0f},mem_bytes={mem}")
+    # paper's qualitative claims, checked quantitatively:
+    for cname in CONFIGS:
+        bk_t, bk_m = results[(cname, "bk")]
+        gc_t, gc_m = results[(cname, "ghostclip")]
+        op_t, op_m = results[(cname, "opacus")]
+        emit(f"check_{cname}: BK/GhostClip time={bk_t / gc_t:.2f} (<1 wanted), "
+             f"BK/Opacus mem={bk_m / op_m:.2f} (<1 wanted)")
+    return results
+
+
+if __name__ == "__main__":
+    main()

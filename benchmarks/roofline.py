@@ -1,0 +1,143 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Three per-device terms per (arch x shape), single-pod 16x16 mesh, TPU v5e:
+
+    compute    = HLO_FLOPs / 197e12         (bf16 peak per chip)
+    memory     = HLO_bytes / 819e9          (HBM bandwidth)
+    collective = wire_bytes / 50e9          (ICI per link; all-reduce ~2x its
+                                             buffer, others ~1x)
+
+cost_analysis() numbers are already per-partition (the SPMD module), so no
+chip division is applied. MODEL_FLOPS uses 6*N*D (train) / 2*N*D (fwd-only),
+N = active params, D = tokens — the utilization denominator that catches
+remat / redundant compute.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import build, get_config, list_archs
+from repro.utils.tree import flatten
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+CHIPS = 256
+COLL_WEIGHT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0}
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__),
+                          "../experiments/dryrun/singlepod_16x16")
+
+
+def param_counts(arch: str):
+    """(total, active) parameter counts via abstract init."""
+    cfg = get_config(arch)
+    model = build(cfg)
+    params = jax.eval_shape(model.init,
+                            jax.ShapeDtypeStruct((2,), "uint32"))
+    total = active = 0
+    for path, leaf in flatten(params).items():
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        total += n
+        if "/experts/" in path and cfg.n_experts:
+            active += n * cfg.top_k / cfg.n_experts
+        else:
+            active += n
+    return total, active
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    _, active = param_counts(arch)
+    if shape.kind == "train":
+        toks = shape.global_batch * (cfg.decoder_len if cfg.family == "encdec"
+                                     else shape.seq_len)
+        return 6.0 * active * toks
+    if shape.kind == "prefill":
+        toks = shape.global_batch * (cfg.decoder_len if cfg.family == "encdec"
+                                     else shape.seq_len)
+        return 2.0 * active * toks
+    return 2.0 * active * shape.global_batch  # decode: one token per sequence
+
+
+def analyze(rec: dict) -> dict:
+    # trip-aware totals from utils.hlo (XLA's cost_analysis counts scan
+    # bodies once; see EXPERIMENTS.md §Dry-run methodology)
+    flops = rec.get("hlo", rec["cost"]).get("flops", 0.0)
+    byts = rec.get("hlo", {}).get("traffic_bytes",
+                                  rec["cost"].get("bytes accessed", 0.0))
+    wire = sum(COLL_WEIGHT.get(k, 1.0) * v
+               for k, v in rec["collectives"].items() if k != "total")
+    t_c = flops / PEAK_FLOPS
+    t_m = byts / HBM_BW
+    t_x = wire / ICI_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    mf = model_flops(rec["arch"], rec["shape"])
+    useful = mf / (flops * CHIPS) if flops else 0.0
+    bound = max(t_c, t_m, t_x)
+    frac = t_c / bound if bound else 0.0  # fraction of time on the MXU
+    return {"compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+            "dominant": dom, "model_flops": mf,
+            "useful_flops_ratio": useful, "roofline_fraction": frac}
+
+
+SUGGEST = {
+    "compute": "compute-bound: reduce recompute (remat policy) or raise "
+               "useful-flops ratio; MXU-align matmul dims",
+    "memory": "memory-bound: fuse ghost-norm Grams (Pallas kernel removes "
+              "2BT^2 HBM traffic), shrink book-kept taps via microbatch, "
+              "chunk the lm-head loss",
+    "collective": "collective-bound: reshard to cut all-gathers (FSDP "
+                  "prefetch under scan), overlap via latency-hiding "
+                  "scheduler, 8-bit pod-axis compression",
+}
+
+
+def load_cells(dryrun_dir: str = DRYRUN_DIR):
+    cells = []
+    if not os.path.isdir(dryrun_dir):
+        return cells
+    for fn in sorted(os.listdir(dryrun_dir)):
+        if fn.endswith(".json"):
+            with open(os.path.join(dryrun_dir, fn)) as f:
+                cells.append(json.load(f))
+    return cells
+
+
+def main(emit=print, dryrun_dir: str = DRYRUN_DIR):
+    cells = load_cells(dryrun_dir)
+    if not cells:
+        emit("roofline: no dry-run artifacts yet "
+             "(run python -m repro.launch.dryrun --all)")
+        return []
+    emit("# Roofline (per-device seconds, single-pod 16x16 v5e)")
+    emit(f"{'arch':22s} {'shape':12s} {'compute':>9s} {'memory':>9s} "
+         f"{'collect':>9s} {'dominant':>10s} {'useful':>7s} {'roofl%':>7s}")
+    out = []
+    for rec in cells:
+        if rec["status"] == "skip":
+            emit(f"{rec['arch']:22s} {rec['shape']:12s} {'skip':>9s} "
+                 f"— {rec['reason'][:60]}")
+            continue
+        if rec["status"] != "ok":
+            emit(f"{rec['arch']:22s} {rec['shape']:12s} {'ERROR':>9s}")
+            continue
+        a = analyze(rec)
+        out.append({**rec, **a})
+        emit(f"{rec['arch']:22s} {rec['shape']:12s} {a['compute_s']:9.4f} "
+             f"{a['memory_s']:9.4f} {a['collective_s']:9.4f} "
+             f"{a['dominant']:>10s} {a['useful_flops_ratio']:7.2f} "
+             f"{100 * a['roofline_fraction']:6.1f}%")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Emits ``name,us_per_call,derived`` CSV lines plus validation verdicts.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    fast = "--fast" in sys.argv
+    print("== Table 2/5/8: complexity model vs paper ==")
+    from benchmarks import table8
+    errs8 = table8.main()
+
+    print("\n== Table 4/10: mixed ghost norm space savings ==")
+    from benchmarks import table10
+    errs10 = table10.main()
+
+    print("\n== Figure 2: MLP speed/memory (measured) ==")
+    from benchmarks import fig2_mlp
+    fig2_mlp.main()
+
+    print("\n== Table 9: throughput (measured, reduced GPT2) ==")
+    from benchmarks import throughput
+    throughput.main()
+
+    print("\n== Roofline (from dry-run artifacts) ==")
+    from benchmarks import roofline
+    roofline.main()
+
+    if errs8 or errs10:
+        print(f"VALIDATION FAILURES: {errs8 + errs10}")
+        raise SystemExit(1)
+    print("\nall benchmark validations OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Reproduce paper Tables 4/10: space complexity of computing per-sample
+gradient norms — ghost vs instantiation vs mixed (the layerwise decision),
+on ResNet18 / VGG11 / ViT at ImageNet resolution. Validates e.g. ResNet18:
+ghost 399M, instantiation 11.5M, mixed 1.0M (399x / 11.5x savings)."""
+from __future__ import annotations
+
+from benchmarks.complexity import (clip_norm_space, resnet18_layers,
+                                   vgg11_layers, vit_patch_layers)
+
+# paper Table 10 values (B=1, elements)
+PAPER = {
+    "resnet18": {"ghost": 399e6, "instantiate": 11.5e6, "mixed": 1.0e6},
+    "vit-base": {"ghost": 3.8e6, "instantiate": 86.3e6, "mixed": 3.8e6},
+}
+
+
+def rows():
+    models = {
+        "resnet18": resnet18_layers(224),
+        "resnet18@512": resnet18_layers(448),   # higher-res regime (Fig. 7)
+        "vgg11": vgg11_layers(224),
+        "vit-base": vit_patch_layers(12, 768),
+        "vit-large": vit_patch_layers(24, 1024),
+    }
+    out = []
+    for name, layers in models.items():
+        rec = {"model": name}
+        for impl in ("ghost", "instantiate", "mixed"):
+            rec[impl] = clip_norm_space(layers, 1, impl)
+        rec["saving_vs_ghost"] = rec["ghost"] / rec["mixed"]
+        rec["saving_vs_inst"] = rec["instantiate"] / rec["mixed"]
+        out.append(rec)
+    return out
+
+
+def validate(tol=0.3):
+    errs = []
+    for rec in rows():
+        want = PAPER.get(rec["model"])
+        if not want:
+            continue
+        for impl, w in want.items():
+            if abs(rec[impl] - w) / w > tol:
+                errs.append(f"{rec['model']}/{impl}: got {rec[impl]:.3g} "
+                            f"want {w:.3g}")
+    return errs
+
+
+def main(emit=print):
+    emit("# Table 10 reproduction: per-sample-grad-norm space (B=1, elements)")
+    emit(f"{'model':14s} {'ghost':>10s} {'instant':>10s} {'mixed':>10s} "
+         f"{'save/ghost':>10s} {'save/inst':>10s}")
+    for r in rows():
+        emit(f"{r['model']:14s} {r['ghost']:10.3g} {r['instantiate']:10.3g} "
+             f"{r['mixed']:10.3g} {r['saving_vs_ghost']:10.1f} "
+             f"{r['saving_vs_inst']:10.1f}")
+    errs = validate()
+    emit(f"validation vs paper: {'OK' if not errs else errs}")
+    return errs
+
+
+if __name__ == "__main__":
+    main()

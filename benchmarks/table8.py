@@ -1,0 +1,66 @@
+"""Reproduce paper Table 8: whole-model time/space complexity of BK vs
+non-DP / GhostClip / Opacus, B=100, for RoBERTa / ViT / BEiT / GPT2 at their
+task sequence lengths — validating the faithful complexity claims
+(e.g. GPT2-large T=100: non-DP 0.97x, GhostClip 1.65x, Opacus 1.30x of BK)."""
+from __future__ import annotations
+
+from benchmarks.complexity import MODELS, model_space, model_time, transformer_layers
+
+B = 100
+# (model, T) cells exactly as Table 8's rows
+ROWS = [
+    ("roberta-base", 256), ("roberta-large", 256),
+    ("vit-base", 197), ("vit-large", 197), ("beit-large", 197),
+    ("gpt2-small", 100), ("gpt2-medium", 100), ("gpt2-large", 100),
+    ("gpt2-small", 1000), ("gpt2-medium", 1000), ("gpt2-large", 1000),
+]
+# paper-reported ratios vs BK (time; space) for spot validation
+PAPER_TIME_RATIOS = {
+    ("gpt2-large", 100): {"nonDP": 0.97, "GhostClip": 1.65, "Opacus": 1.30},
+    ("roberta-large", 256): {"nonDP": 0.89, "GhostClip": 1.59, "Opacus": 1.18},
+    ("gpt2-large", 1000): {"nonDP": 0.79, "GhostClip": 1.55, "Opacus": 1.04},
+}
+
+
+def rows():
+    out = []
+    for name, T in ROWS:
+        nl, d, vocab, ff = MODELS[name]
+        layers = transformer_layers(nl, d, T, vocab, d_ff=ff)
+        bk_t = model_time(layers, B, "BK-MixOpt")
+        bk_s = model_space(layers, B, "BK-MixOpt")
+        rec = {"model": name, "T": T, "bk_time": bk_t, "bk_space": bk_s}
+        for impl in ("nonDP", "GhostClip", "Opacus"):
+            rec[f"time_ratio_{impl}"] = model_time(layers, B, impl) / bk_t
+            rec[f"space_ratio_{impl}"] = model_space(layers, B, impl) / bk_s
+        out.append(rec)
+    return out
+
+
+def validate(tol: float = 0.15):
+    """Computed ratios within tol of the paper's Table 8 values."""
+    errs = []
+    for rec in rows():
+        key = (rec["model"], rec["T"])
+        for impl, want in PAPER_TIME_RATIOS.get(key, {}).items():
+            got = rec[f"time_ratio_{impl}"]
+            if abs(got - want) / want > tol:
+                errs.append(f"{key} {impl}: got {got:.2f} want {want:.2f}")
+    return errs
+
+
+def main(emit=print):
+    emit("# Table 8 reproduction (time ratios vs BK-MixOpt, B=100)")
+    emit(f"{'model':15s} {'T':>5s} {'BK(1e12)':>9s} {'nonDP':>6s} "
+         f"{'Ghost':>6s} {'Opacus':>6s}")
+    for rec in rows():
+        emit(f"{rec['model']:15s} {rec['T']:5d} {rec['bk_time']/1e12:9.1f} "
+             f"{rec['time_ratio_nonDP']:6.2f} {rec['time_ratio_GhostClip']:6.2f} "
+             f"{rec['time_ratio_Opacus']:6.2f}")
+    errs = validate()
+    emit(f"validation vs paper: {'OK' if not errs else errs}")
+    return errs
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Table 9-style measured throughput: a reduced GPT2-family transformer,
+tokens/sec for each DP implementation on this host. Relative ordering
+(nonDP > BK > GhostClip > Opacus-ish) is the paper's claim; absolute numbers
+are CPU-host artifacts."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.core.bk import DPConfig
+from repro.core.engine import make_grad_fn
+from repro.data.synthetic import make_batch
+from repro.models.transformer import TransformerLM
+
+B, T = 8, 64
+MODES = ["nonprivate", "bk", "bk-mixopt", "ghostclip", "opacus", "fastgradclip"]
+
+
+def tiny_gpt2() -> ModelConfig:
+    return ModelConfig(name="tiny-gpt2", family="dense", n_layers=4,
+                       d_model=128, n_heads=4, n_kv_heads=4, head_dim=32,
+                       d_ff=512, vocab=512, norm="layernorm", act="gelu",
+                       max_t=T)
+
+
+def main(emit=print):
+    emit("# Table 9 (measured, reduced GPT2): tokens/sec per implementation")
+    cfg = tiny_gpt2()
+    model = TransformerLM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, B, T, seed=1)
+    out = {}
+    for mode in MODES:
+        fn = jax.jit(make_grad_fn(model.apply, DPConfig(mode=mode, sigma=0.5)))
+        r = fn(params, batch, jax.random.PRNGKey(2))
+        jax.block_until_ready(r)
+        iters = 3
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            r = fn(params, batch, jax.random.PRNGKey(2))
+        jax.block_until_ready(r)
+        dt = (time.perf_counter() - t0) / iters
+        tps = B * T / dt
+        out[mode] = tps
+        emit(f"throughput_{mode},{dt * 1e6:.0f},tokens_per_s={tps:.0f}")
+    emit(f"check: BK speedup over GhostClip = {out['bk'] / out['ghostclip']:.2f}x"
+         f" (paper: 1.3-1.4x on A100)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

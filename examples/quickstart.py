@@ -1,0 +1,44 @@
+"""Quickstart: the paper's Sec. 4 usage pattern, JAX-style.
+
+Swap a standard training step for its DP version by choosing a
+clipping_mode — same optimizer, same accuracy semantics, BK cost profile.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import build, smoke_config
+from repro.core.bk import DPConfig
+from repro.core.engine import PrivacyEngine
+from repro.data.synthetic import make_batch
+from repro.optim.optimizers import make_optimizer
+
+# 1. a model from the zoo (reduced config so this runs on CPU in seconds)
+cfg = smoke_config("qwen2-1.5b").with_(dtype="float32", param_dtype="float32")
+model = build(cfg)
+params = model.init(jax.random.PRNGKey(0))
+
+# 2. a PrivacyEngine: pick the implementation ('bk-mixopt' = the paper's
+#    hybrid BK) and the privacy budget; sigma is calibrated via the RDP
+#    accountant exactly as the paper's codebase does.
+engine = PrivacyEngine(
+    model.apply,
+    DPConfig(mode="bk-mixopt", clipping="automatic", R=1.0),
+    batch_size=16, dataset_size=50_000, epochs=3, target_epsilon=3.0)
+print(f"accountant: sigma={engine.cfg.sigma:.3f} -> "
+      f"eps={engine.budget.epsilon:.2f} at delta={engine.budget.delta}")
+
+# 3. the usual training loop — engine.grad is a drop-in for jax.grad
+opt = make_optimizer("adamw", lambda s: jnp.asarray(1e-3))
+opt_state = opt.init(params)
+step_fn = jax.jit(lambda p, o, i, b, r: (lambda g, aux: (
+    *opt.update(g, o, p, i), aux["loss"]))(*engine.grad(p, b, r)))
+
+for step in range(5):
+    batch = make_batch(cfg, B=16, T=32, seed=0, step=step)
+    rng = jax.random.fold_in(jax.random.PRNGKey(1), step)
+    params, opt_state, loss = step_fn(params, opt_state, jnp.asarray(step),
+                                      batch, rng)
+    print(f"step {step}: private loss {float(loss):.4f}")
+print("OK — differentially private training with Book-Keeping.")

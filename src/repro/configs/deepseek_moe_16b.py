@@ -1,0 +1,15 @@
+"""deepseek-moe-16b [moe] — arXiv:2401.06066. 28L, d=2048, 16H kv=16,
+expert d_ff=1408, 64 routed top-6 + 2 shared, first layer dense,
+vocab=102400."""
+from repro.configs.base import ModelConfig
+from repro.configs.registry import register
+
+
+@register
+def deepseek_moe_16b() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-moe-16b", family="moe", n_layers=28, d_model=2048,
+        n_heads=16, n_kv_heads=16, head_dim=128, d_ff=10944, vocab=102400,
+        n_experts=64, top_k=6, n_shared=2, moe_d_ff=1408, first_k_dense=1, capacity_factor=1.25,
+        renorm_topk=False, rope_theta=10000.0, norm="rmsnorm", act="swiglu",
+        dtype="bfloat16", param_dtype="bfloat16", remat=True, attn_chunk=512)

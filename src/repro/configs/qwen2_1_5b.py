@@ -1,0 +1,13 @@
+"""qwen2-1.5b [dense] — arXiv:2407.10671. 28L, d=1536, 12H GQA kv=2,
+d_ff=8960, vocab=151936, QKV bias."""
+from repro.configs.base import ModelConfig
+from repro.configs.registry import register
+
+
+@register
+def qwen2_1_5b() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-1.5b", family="dense", n_layers=28, d_model=1536,
+        n_heads=12, n_kv_heads=2, head_dim=128, d_ff=8960, vocab=151936,
+        qkv_bias=True, rope_theta=1000000.0, norm="rmsnorm", act="swiglu",
+        dtype="bfloat16", param_dtype="bfloat16", remat=True, attn_chunk=512)

@@ -1,0 +1,125 @@
+"""Privacy accounting: RDP of the Sampled Gaussian Mechanism (Mironov et al.
+2019) + conversion to (eps, delta)-DP, plus sigma calibration.
+
+Pure numpy (runs at config time, not in the training graph). The training
+loop derives ``sigma`` from (target_epsilon, delta, sample_rate, steps), the
+paper's Section 1.3 pipeline: accounting is independent of the clipping
+threshold R.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+from scipy.special import gammaln
+
+DEFAULT_ORDERS = tuple([1.25, 1.5, 1.75, 2.0, 2.5, 3.0, 4.0, 5.0, 6.0, 8.0]
+                       + list(range(10, 64))
+                       + [72, 96, 128, 256, 512])
+
+
+def _log_binom(n: int, k: np.ndarray) -> np.ndarray:
+    return gammaln(n + 1) - gammaln(k + 1) - gammaln(n - k + 1)
+
+
+def _log_a_int(q: float, sigma: float, alpha: int) -> float:
+    """log A(alpha) for integer alpha >= 2 (Mironov et al. 2019, Sec 3.3)."""
+    k = np.arange(alpha + 1, dtype=np.float64)
+    terms = (_log_binom(alpha, k)
+             + k * math.log(q)
+             + (alpha - k) * math.log1p(-q)
+             + (k * k - k) / (2.0 * sigma * sigma))
+    m = terms.max()
+    return float(m + np.log(np.sum(np.exp(terms - m))))
+
+
+def _log_a_frac(q: float, sigma: float, alpha: float) -> float:
+    """Fractional alpha via quadrature of
+    A(alpha) = E_{z~N(0,s^2)} [((1-q) + q e^{(2z-1)/(2s^2)})^alpha]."""
+    from scipy.integrate import quad
+
+    s2 = sigma * sigma
+
+    def integrand(z):
+        logratio = np.logaddexp(math.log1p(-q),
+                                math.log(q) + (2.0 * z - 1.0) / (2.0 * s2))
+        log_f = (alpha * logratio - z * z / (2.0 * s2)
+                 - 0.5 * math.log(2.0 * math.pi * s2))
+        return np.exp(log_f)
+
+    val, _ = quad(integrand, -np.inf, np.inf, limit=200)
+    return float(np.log(val))
+
+
+def rdp_sgm(q: float, sigma: float, alpha: float) -> float:
+    """RDP epsilon of one SGM step at order alpha."""
+    if q == 0.0:
+        return 0.0
+    if sigma == 0.0:
+        return float("inf")
+    if q == 1.0:
+        return alpha / (2.0 * sigma * sigma)
+    if float(alpha).is_integer():
+        log_a = _log_a_int(q, sigma, int(alpha))
+    else:
+        log_a = _log_a_frac(q, sigma, alpha)
+    return log_a / (alpha - 1.0)
+
+
+def rdp_to_eps(rdp: np.ndarray, orders: np.ndarray, delta: float) -> float:
+    """Improved RDP->(eps,delta) conversion (Balle et al. 2020, as in Opacus)."""
+    orders = np.asarray(orders, dtype=np.float64)
+    rdp = np.asarray(rdp, dtype=np.float64)
+    eps = (rdp
+           - (math.log(delta) + np.log(orders)) / (orders - 1.0)
+           + np.log1p(-1.0 / orders))
+    eps = np.where(np.isnan(eps), np.inf, eps)
+    return float(max(0.0, np.min(eps)))
+
+
+@dataclass(frozen=True)
+class PrivacyBudget:
+    epsilon: float
+    delta: float
+    sigma: float
+    sample_rate: float
+    steps: int
+
+
+def compute_epsilon(sigma: float, sample_rate: float, steps: int,
+                    delta: float, orders=DEFAULT_ORDERS) -> float:
+    rdp = np.array([steps * rdp_sgm(sample_rate, sigma, a) for a in orders])
+    return rdp_to_eps(rdp, np.array(orders), delta)
+
+
+def calibrate_sigma(target_epsilon: float, sample_rate: float, steps: int,
+                    delta: float, orders=DEFAULT_ORDERS,
+                    tol: float = 1e-3) -> float:
+    """Smallest sigma achieving eps <= target, via bisection."""
+    lo, hi = 0.1, 1.0
+    while compute_epsilon(hi, sample_rate, steps, delta, orders) > target_epsilon:
+        hi *= 2.0
+        if hi > 1e4:
+            raise ValueError("cannot reach target epsilon")
+    while compute_epsilon(lo, sample_rate, steps, delta, orders) < target_epsilon:
+        lo /= 2.0
+        if lo < 1e-6:
+            return lo
+    while hi - lo > tol:
+        mid = 0.5 * (lo + hi)
+        if compute_epsilon(mid, sample_rate, steps, delta, orders) > target_epsilon:
+            lo = mid
+        else:
+            hi = mid
+    return hi
+
+
+def budget_for(target_epsilon: float, delta: float, batch_size: int,
+               dataset_size: int, epochs: float) -> PrivacyBudget:
+    """The PrivacyEngine entry point, mirroring the paper's Sec. 4 API."""
+    q = batch_size / dataset_size
+    steps = int(math.ceil(epochs * dataset_size / batch_size))
+    sigma = calibrate_sigma(target_epsilon, q, steps, delta)
+    eps = compute_epsilon(sigma, q, steps, delta)
+    return PrivacyBudget(eps, delta, sigma, q, steps)

@@ -1,0 +1,140 @@
+"""Baseline DP implementations the paper compares against (Table 2).
+
+Every baseline computes the SAME private gradient as BK (same math, different
+time/space tradeoff) — tests assert exact agreement:
+
+  non-private   1 bwd, no clipping                            (reference point)
+  TF-Privacy    B sequential backprops (lax.map)              6BTpd, slow
+  Opacus        vmap per-sample grads, instantiated           8BTpd, Bpd memory
+  FastGradClip  per-sample norms then 2nd bwd of reweighted   8BTpd
+  GhostClip     ghost norms (taps) then 2nd full bwd          10BTpd + 2BT^2(p+d)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bk import DPConfig, batch_size_of, split_param_paths, tap_structs, record_sq_norm
+from repro.core.noise import add_noise
+from repro.core.tape import Tape
+from repro.utils.tree import flatten, unflatten
+
+F32 = jnp.float32
+
+
+def _loss_all(apply_fn, params, batch):
+    return apply_fn(params, batch, Tape(None))  # (B,) per-sample losses
+
+
+def _single(apply_fn, params, sample):
+    batch1 = jax.tree_util.tree_map(lambda x: x[None], sample)
+    return _loss_all(apply_fn, params, batch1)[0]
+
+
+def _tree_sq_norm(g):
+    return sum(jnp.sum(jnp.square(x.astype(F32))) for x in jax.tree_util.tree_leaves(g))
+
+
+def _clip_sum_noise(per_sample_grads, losses, rng, cfg, B):
+    """Shared tail: norms -> C -> weighted sum -> noise. per_sample_grads has
+    leading B on every leaf."""
+    flat = flatten(per_sample_grads)
+    sq = jnp.zeros((B,), F32)
+    for g in flat.values():
+        g = g.astype(F32)
+        sq = sq + jnp.sum(g * g, axis=tuple(range(1, g.ndim)))
+    norms = jnp.sqrt(sq)
+    C = cfg.clip_fn()(norms).astype(F32)
+    summed = {p: jnp.einsum("b...,b->...", g.astype(F32), C).astype(g.dtype)
+              for p, g in flat.items()}
+    summed = add_noise(summed, rng, cfg.sigma, cfg.R, float(B))
+    aux = {"loss": jnp.mean(losses), "per_sample_norms": norms, "clip_factors": C}
+    return unflatten(summed), aux
+
+
+# ----------------------------------------------------------------- baselines
+def nonprivate_grad(apply_fn, params, batch, rng, cfg: DPConfig):
+    def mean_loss(p):
+        return jnp.mean(_loss_all(apply_fn, p, batch))
+
+    loss, grads = jax.value_and_grad(mean_loss)(params)
+    return grads, {"loss": loss}
+
+
+def opacus_grad(apply_fn, params, batch, rng, cfg: DPConfig):
+    """vmap(grad) — instantiates all B per-sample gradients (module 4)."""
+    B = batch_size_of(batch)
+    gfn = jax.grad(lambda p, s: _single(apply_fn, p, s))
+    per_g = jax.vmap(gfn, in_axes=(None, 0))(params, batch)
+    losses = _loss_all(apply_fn, params, batch)
+    return _clip_sum_noise(per_g, losses, rng, cfg, B)
+
+
+def tfprivacy_grad(apply_fn, params, batch, rng, cfg: DPConfig):
+    """B sequential backprops via lax.map (memory-light, slow)."""
+    B = batch_size_of(batch)
+    vg = jax.value_and_grad(lambda p, s: _single(apply_fn, p, s), argnums=0)
+    losses, per_g = jax.lax.map(lambda s: vg(params, s), batch)
+    return _clip_sum_noise(per_g, losses, rng, cfg, B)
+
+
+def fastgradclip_grad(apply_fn, params, batch, rng, cfg: DPConfig):
+    """Lee & Kifer 2020: per-sample norms (grads discarded), then a second
+    backprop of the reweighted loss sum_i C_i L_i."""
+    B = batch_size_of(batch)
+    gfn = jax.grad(lambda p, s: _single(apply_fn, p, s))
+    sq = jax.lax.map(lambda s: _tree_sq_norm(gfn(params, s)), batch)
+    norms = jnp.sqrt(sq)
+    C = jax.lax.stop_gradient(cfg.clip_fn()(norms).astype(F32))
+
+    def reweighted(p):
+        losses = _loss_all(apply_fn, p, batch)
+        return jnp.sum(C * losses), losses
+
+    (_, losses), grads = jax.value_and_grad(reweighted, has_aux=True)(params)
+    flat = {p: g for p, g in flatten(grads).items()}
+    flat = add_noise(flat, rng, cfg.sigma, cfg.R, float(B))
+    aux = {"loss": jnp.mean(losses), "per_sample_norms": norms, "clip_factors": C}
+    return unflatten(flat), aux
+
+
+def ghostclip_grad(apply_fn, params, batch, rng, cfg: DPConfig):
+    """Li et al. 2021 / Bu et al. 2022a: ghost norms from a tapped first
+    backprop (no per-sample grads), then a second full backprop."""
+    B = batch_size_of(batch)
+    flat_params = flatten(params)
+    tap_struct = tap_structs(apply_fn, params, batch)
+    _, psp_paths = split_param_paths(params, tap_struct)
+    taps0 = {k: jnp.zeros(v.shape, v.dtype) for k, v in tap_struct.items()}
+    psp0 = {p: jnp.broadcast_to(flat_params[p], (B,) + flat_params[p].shape)
+            for p in psp_paths}
+
+    def run(taps, psp):
+        merged = dict(flat_params)
+        merged.update(psp)
+        tape = Tape(taps)
+        losses = apply_fn(unflatten(merged), batch, tape)
+        return jnp.sum(losses), tape.acts
+
+    _, vjp_fn, acts = jax.vjp(run, taps0, psp0, has_aux=True)
+    ds_taps, g_psp = vjp_fn(jnp.asarray(1.0, F32))
+
+    sq = jnp.zeros((B,), F32)
+    for key in sorted(acts):
+        nk, _ = record_sq_norm(key, acts[key], ds_taps[key], "bk", cfg.use_kernels)
+        sq = sq + nk
+    for p in psp_paths:
+        g = g_psp[p].astype(F32)
+        sq = sq + jnp.sum(g * g, axis=tuple(range(1, g.ndim)))
+    norms = jnp.sqrt(sq)
+    C = jax.lax.stop_gradient(cfg.clip_fn()(norms).astype(F32))
+
+    def reweighted(p):
+        losses = _loss_all(apply_fn, p, batch)
+        return jnp.sum(C * losses), losses
+
+    (_, losses), grads = jax.value_and_grad(reweighted, has_aux=True)(params)
+    flat = flatten(grads)
+    flat = add_noise(flat, rng, cfg.sigma, cfg.R, float(B))
+    aux = {"loss": jnp.mean(losses), "per_sample_norms": norms, "clip_factors": C}
+    return unflatten(flat), aux

@@ -1,0 +1,218 @@
+"""The Book-Keeping (BK) engine — Algorithm 1 of the paper, JAX-native.
+
+One jax.vjp w.r.t. (taps, per-sample params) yields, in a SINGLE
+back-propagation and without ever instantiating per-sample weight gradients:
+
+  * every layer's output gradient dL/ds_(l)      (tap cotangents — book-keeping)
+  * per-sample gradients of vector params (B,..) (psp cotangents — the 0.1%)
+
+and because the weights themselves are not differentiated, XLA never emits
+the non-private parameter-gradient matmuls (ghost differentiation).
+
+Phases (all inside one jit-able pure function):
+  1. fwd + output-grad bwd via vjp            — modules 1 + 2a
+  2. per-sample squared norms per tapped op   — module 3 (ghost) or 4 (direct)
+     + vector-param norms; aggregate across layers; clip factors C_i
+  3. weighted gradients G_l = a^T diag(C) ds  — module 2b'/5
+  4. Gaussian noise, scale by 1/B
+
+Modes:
+  'bk'           ghost norm everywhere (base BK)
+  'bk-mixghost'  layerwise ghost-vs-direct for the *norm* only
+  'bk-mixopt'    layerwise for norm AND weighted grad (reuses instantiated
+                 per-sample grads for module 5 when direct is chosen)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ghost
+from repro.core.clipping import get_clip_fn
+from repro.core.noise import add_noise
+from repro.core.tape import Tape, parse_key
+from repro.utils.tree import flatten, unflatten
+
+F32 = jnp.float32
+
+BK_MODES = ("bk", "bk-mixghost", "bk-mixopt")
+
+
+@dataclass(frozen=True)
+class DPConfig:
+    clipping: str = "automatic"      # clipping fn name (core.clipping)
+    R: float = 1.0                   # clipping threshold / normalizer
+    sigma: float = 0.0               # noise multiplier (0 = clipping only)
+    mode: str = "bk"                 # implementation (BK_MODES + baselines)
+    use_kernels: bool = False        # dispatch fused Pallas kernels
+    gamma: float = 0.01              # automatic-clipping stability constant
+
+    def clip_fn(self) -> Callable:
+        kw = {"gamma": self.gamma} if self.clipping == "automatic" else {}
+        return get_clip_fn(self.clipping, self.R, **kw)
+
+
+# --------------------------------------------------------------------- utils
+def batch_size_of(batch: dict) -> int:
+    return jax.tree_util.tree_leaves(batch)[0].shape[0]
+
+
+def tap_structs(apply_fn, params, batch):
+    """Tap zero-structure via one (free) eval_shape pass."""
+
+    def shape_run(p, b):
+        tape = Tape(None)
+        apply_fn(p, b, tape)
+        return tape.tap_zeros
+
+    return jax.eval_shape(shape_run, params, batch)
+
+
+def split_param_paths(params, tap_struct):
+    """-> (ghost_w_paths, psp_paths). Ghost leaves are '<tap path>/w'."""
+    flat = flatten(params)
+    tapped = {parse_key(k)[0] + "/w" for k in tap_struct}
+    ghost_paths = sorted(p for p in flat if p in tapped)
+    psp_paths = sorted(p for p in flat if p not in tapped)
+    missing = tapped - set(flat)
+    if missing:
+        raise ValueError(f"tapped ops without matching '<path>/w' param: {sorted(missing)}")
+    dead = [p for p in psp_paths if p.endswith("/w")]
+    if dead:
+        raise ValueError(
+            "untapped weight params (dead or mis-named tap — every '/w' leaf "
+            f"must belong to a tapped generalized-linear op): {dead}")
+    return ghost_paths, psp_paths
+
+
+# ------------------------------------------------------------- norm dispatch
+def record_sq_norm(key: str, act, ds, mode: str, use_kernels: bool):
+    """Per-sample squared norm for one tapped op.
+
+    Returns (sq_norms (B,), cached) where cached optionally carries the
+    instantiated per-sample grads for mixopt reuse in phase 3.
+    """
+    _, kind, _ = parse_key(key)
+    if kind == "mm":
+        T, d, p = act.shape[-2], act.shape[-1], ds.shape[-1]
+        use_ghost = mode == "bk" or ghost.prefer_ghost(T, d, p)
+        if use_ghost:
+            if use_kernels:
+                from repro.kernels import ops as kops
+                return kops.ghost_norm_mm(act, ds), None
+            return ghost.sq_norm_mm_ghost(act, ds), None
+        B = act.shape[-3]
+        L = act.shape[0] if act.ndim == 4 else 1
+        small = L * B * d * p <= ghost.MAP_THRESHOLD
+        if mode == "bk-mixopt" and not use_kernels and small:
+            # instantiate once, reuse for module 5 in phase 3 (only when the
+            # per-sample grads are cheap to keep; else phase 3 re-einsums)
+            eq = "lbtd,lbtp->lbdp" if act.ndim == 4 else "btd,btp->bdp"
+            g = jnp.einsum(eq, act.astype(F32), ds.astype(F32))
+            axes = tuple(i for i in range(g.ndim) if i != (1 if g.ndim == 4 else 0))
+            return jnp.sum(g * g, axis=axes), g
+        if use_kernels:
+            from repro.kernels import ops as kops
+            return kops.direct_norm_mm(act, ds), None
+        return ghost.sq_norm_mm_direct(act, ds), None
+    if kind == "emb":
+        return ghost.sq_norm_emb(act, ds), None
+    if kind == "moe":
+        C, d, p = act["a"].shape[-2], act["a"].shape[-1], ds.shape[-1]
+        if mode == "bk" or ghost.prefer_ghost(C, d, p):
+            return ghost.sq_norm_moe_ghost(act, ds), None
+        return ghost.sq_norm_moe_direct(act, ds), None
+    raise ValueError(f"unknown tap kind in key {key!r}")
+
+
+def record_weighted_grad(key: str, act, ds, C, cached, use_kernels: bool,
+                         out_dtype, vocab: int = 0):
+    _, kind, _ = parse_key(key)
+    if kind == "mm":
+        if cached is not None:  # mixopt module-5 reuse: sum_i C_i g_i (2Bpd)
+            eq = "lbdp,b->ldp" if cached.ndim == 4 else "bdp,b->dp"
+            return jnp.einsum(eq, cached, C.astype(F32)).astype(out_dtype)
+        if use_kernels:
+            from repro.kernels import ops as kops
+            return kops.clipped_grad_mm(act, C, ds).astype(out_dtype)
+        return ghost.weighted_grad_mm(act, C, ds, out_dtype)
+    if kind == "emb":
+        return ghost.weighted_grad_emb(act, C, ds, vocab, out_dtype)
+    if kind == "moe":
+        return ghost.weighted_grad_moe(act, C, ds, out_dtype)
+    raise ValueError(f"unknown tap kind in key {key!r}")
+
+
+# ------------------------------------------------------------------- BK core
+def bk_clipped_sum(apply_fn, params, batch, cfg: DPConfig):
+    """Phases 1-3 of BK: the pre-noise clipped gradient SUM (flat dict).
+
+    This is the accumulation unit for the physical/logical batch split
+    (paper footnote 2): sum over microbatches, then noise ONCE per logical
+    batch. Returns (flat_sums, aux)."""
+    assert cfg.mode in BK_MODES, cfg.mode
+    B = batch_size_of(batch)
+    flat_params = flatten(params)
+    tap_struct = tap_structs(apply_fn, params, batch)
+    _, psp_paths = split_param_paths(params, tap_struct)
+
+    taps0 = {k: jnp.zeros(v.shape, v.dtype) for k, v in tap_struct.items()}
+    psp0 = {p: jnp.broadcast_to(flat_params[p], (B,) + flat_params[p].shape)
+            for p in psp_paths}
+
+    # ---- phase 1: one forward + one output-gradient-only backward ----------
+    def run(taps, psp):
+        merged = dict(flat_params)
+        merged.update(psp)
+        tape = Tape(taps)
+        losses = apply_fn(unflatten(merged), batch, tape)
+        return jnp.sum(losses), (losses, tape.acts)
+
+    loss_sum, vjp_fn, (losses, acts) = jax.vjp(run, taps0, psp0, has_aux=True)
+    ds_taps, g_psp = vjp_fn(jnp.ones_like(loss_sum))
+
+    # ---- phase 2: per-sample norms + clip factors ---------------------------
+    sq = jnp.zeros((B,), F32)
+    cache = {}
+    for key in sorted(acts):
+        nk, cached = record_sq_norm(key, acts[key], ds_taps[key], cfg.mode,
+                                    cfg.use_kernels)
+        cache[key] = cached
+        sq = sq + nk
+    for p in psp_paths:
+        g = g_psp[p].astype(F32)
+        sq = sq + jnp.sum(g * g, axis=tuple(range(1, g.ndim)))
+    norms = jnp.sqrt(sq)
+    C = cfg.clip_fn()(norms).astype(F32)
+
+    # ---- phase 3: weighted gradients ----------------------------------------
+    flat_grads = {}
+    for key in sorted(acts):
+        path, kind, _ = parse_key(key)
+        wpath = path + "/w"
+        w = flat_params[wpath]
+        vocab = w.shape[-2] if kind == "emb" else 0
+        flat_grads[wpath] = record_weighted_grad(
+            key, acts[key], ds_taps[key], C, cache[key], cfg.use_kernels,
+            w.dtype, vocab)
+    for p in psp_paths:
+        g = g_psp[p]
+        flat_grads[p] = jnp.einsum("b...,b->...", g.astype(F32),
+                                   C).astype(flat_params[p].dtype)
+
+    aux = {"loss": jnp.mean(losses), "per_sample_norms": norms,
+           "clip_factors": C}
+    return flat_grads, aux
+
+
+def bk_private_grad(apply_fn, params, batch, rng, cfg: DPConfig):
+    """Private gradient via Book-Keeping: clipped sum + noise + 1/B scale.
+    Returns (grads matching the params tree, aux)."""
+    B = batch_size_of(batch)
+    flat_sums, aux = bk_clipped_sum(apply_fn, params, batch, cfg)
+    # ---- phase 4: noise + scale ---------------------------------------------
+    flat_grads = add_noise(flat_sums, rng, cfg.sigma, cfg.R, float(B))
+    return unflatten(flat_grads), aux

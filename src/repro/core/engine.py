@@ -1,0 +1,57 @@
+"""PrivacyEngine facade: one entry point for all DP implementations.
+
+Mirrors the paper's Sec. 4 usage — choose a ``clipping_mode`` and get back a
+drop-in gradient function with the same signature as non-private training:
+
+    engine = PrivacyEngine(model.apply, DPConfig(mode="bk-mixopt", sigma=...))
+    grads, aux = engine.grad(params, batch, rng)
+
+Modes: 'nonprivate' | 'tfprivacy' | 'opacus' | 'fastgradclip' | 'ghostclip'
+     | 'bk' | 'bk-mixghost' | 'bk-mixopt'
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import Callable
+
+from repro.core import baselines
+from repro.core.accounting import budget_for
+from repro.core.bk import BK_MODES, DPConfig, bk_private_grad
+
+_BASELINES = {
+    "nonprivate": baselines.nonprivate_grad,
+    "tfprivacy": baselines.tfprivacy_grad,
+    "opacus": baselines.opacus_grad,
+    "fastgradclip": baselines.fastgradclip_grad,
+    "ghostclip": baselines.ghostclip_grad,
+}
+
+ALL_MODES = tuple(_BASELINES) + BK_MODES
+
+
+def make_grad_fn(apply_fn: Callable, cfg: DPConfig) -> Callable:
+    """-> fn(params, batch, rng) -> (grads, aux). Pure; jit/pjit it freely."""
+    if cfg.mode in BK_MODES:
+        return lambda params, batch, rng: bk_private_grad(apply_fn, params, batch, rng, cfg)
+    if cfg.mode in _BASELINES:
+        fn = _BASELINES[cfg.mode]
+        return lambda params, batch, rng: fn(apply_fn, params, batch, rng, cfg)
+    raise ValueError(f"unknown mode {cfg.mode!r}; options: {ALL_MODES}")
+
+
+class PrivacyEngine:
+    """Stateful convenience wrapper (accounting + grad fn)."""
+
+    def __init__(self, apply_fn: Callable, cfg: DPConfig,
+                 batch_size: int = 0, dataset_size: int = 0,
+                 epochs: float = 0.0, target_epsilon: float = 0.0,
+                 delta: float = 1e-5):
+        if target_epsilon > 0.0:
+            budget = budget_for(target_epsilon, delta, batch_size,
+                                dataset_size, epochs)
+            cfg = replace(cfg, sigma=budget.sigma)
+            self.budget = budget
+        else:
+            self.budget = None
+        self.cfg = cfg
+        self.grad = make_grad_fn(apply_fn, cfg)

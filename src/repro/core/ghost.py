@@ -1,0 +1,246 @@
+"""Ghost-norm / direct-norm / weighted-gradient math (pure-jnp reference).
+
+Implements the paper's modules on book-kept tensors:
+
+  module 3  (ghost norm):      ||g_i||_F^2 = < a_i a_i^T , ds_i ds_i^T >_F
+  module 4  (direct norm):     instantiate g_i = a_i^T ds_i, take ||.||_F^2
+  module 2b' (weighted grad):  G = a^T diag(C) ds   (the BK line 9 einsum)
+
+Layouts (see core.tape):
+  mm   a (B,T,d)  ds (B,T,p)      stacked: (L,B,T,d) / (L,B,T,p)
+  emb  ids (B,T)  ds (B,T,d)      stacked: (L,B,T)   / (L,B,T,d)
+  moe  {'a': (B,E,C,d), 'mask': (B,E,C)}  ds (B,E,C,p)   stacked: +L
+
+All norm accumulation is float32. The fused Pallas kernels in repro.kernels
+compute the same quantities without materializing the (T,T) Grams / (d,p)
+per-sample grads in HBM; ``use_kernels`` in the engine switches the dispatch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def _f32(x):
+    return x.astype(F32)
+
+
+# Above this many elements for the would-be intermediate (Grams / per-sample
+# grads), the norm is computed with a sequential lax.map over (layer, sample)
+# so only ONE intermediate is live — the XLA analogue of the fused Pallas
+# kernels, and what keeps full-BK book-keeping the only O(model)-sized state.
+MAP_THRESHOLD = 1 << 24
+
+
+def _norm4(a: jnp.ndarray, ds: jnp.ndarray):
+    """Canonicalize mm records to (G, B, T, d) with G = stacked layers."""
+    if a.ndim == 3:
+        return a[None], ds[None]
+    if a.ndim == 4:
+        return a, ds
+    raise ValueError(f"mm record must be 3D or 4D, got {a.shape}")
+
+
+# =============================================================== matmul (mm)
+def sq_norm_mm_ghost(a: jnp.ndarray, ds: jnp.ndarray) -> jnp.ndarray:
+    """Ghost norm for s = a W. Returns per-sample squared norms (B,).
+
+    < a_i a_i^T, ds_i ds_i^T >_F, cost 2BT^2(p+d), without forming g_i.
+    Large records: per-(layer,sample) lax.map keeps one (T,T) Gram pair live.
+    """
+    a, ds = _norm4(a, ds)
+    G, B, T, _ = a.shape
+    # bf16 inputs feed the MXU directly with f32 accumulation — never cast
+    # the (large, book-kept) inputs wholesale: XLA hoists such casts out of
+    # the lax.map and materializes f32 copies of every tap.
+    pe = dict(preferred_element_type=F32)
+    if G * B * T * T <= MAP_THRESHOLD:
+        ga = jnp.einsum("gbtd,gbsd->gbts", a, a, **pe)
+        gg = jnp.einsum("gbtp,gbsp->gbts", ds, ds, **pe)
+        return jnp.einsum("gbts,gbts->b", ga, gg, **pe)
+
+    def one(args):
+        ab, gb = args
+        ga = jnp.einsum("td,sd->ts", ab, ab, **pe)
+        gg = jnp.einsum("tp,sp->ts", gb, gb, **pe)
+        return jnp.sum(ga * gg)
+
+    n = jax.lax.map(one, (a.reshape((G * B,) + a.shape[2:]),
+                          ds.reshape((G * B,) + ds.shape[2:])))
+    return n.reshape(G, B).sum(0)
+
+
+def sq_norm_mm_direct(a: jnp.ndarray, ds: jnp.ndarray) -> jnp.ndarray:
+    """Per-sample-grad instantiation norm (Opacus module 4). Cost 2BTpd.
+    Large records: per-(layer,sample) lax.map keeps one (d,p) grad live —
+    removes Opacus's Bpd space term (mirrors kernels/grad_norm_direct)."""
+    a, ds = _norm4(a, ds)
+    G, B, _, d = a.shape
+    p = ds.shape[-1]
+    pe = dict(preferred_element_type=F32)
+    if G * B * d * p <= MAP_THRESHOLD:
+        g = jnp.einsum("gbtd,gbtp->gbdp", a, ds, **pe)
+        return jnp.einsum("gbdp,gbdp->b", g, g)
+
+    def one(args):
+        ab, gb = args
+        g = jnp.einsum("td,tp->dp", ab, gb, **pe)
+        return jnp.sum(g * g)
+
+    n = jax.lax.map(one, (a.reshape((G * B,) + a.shape[2:]),
+                          ds.reshape((G * B,) + ds.shape[2:])))
+    return n.reshape(G, B).sum(0)
+
+
+def weighted_grad_mm(a: jnp.ndarray, C: jnp.ndarray, ds: jnp.ndarray,
+                     out_dtype=None) -> jnp.ndarray:
+    """G = a^T diag(C) ds  -> (d,p) or (L,d,p)."""
+    out_dtype = out_dtype or a.dtype
+    if a.ndim == 3:
+        g = jnp.einsum("btd,b,btp->dp", a, C.astype(a.dtype), ds,
+                       preferred_element_type=F32)
+    elif a.ndim == 4:
+        g = jnp.einsum("lbtd,b,lbtp->ldp", a, C.astype(a.dtype), ds,
+                       preferred_element_type=F32)
+    else:
+        raise ValueError(f"mm record must be 3D or 4D, got {a.shape}")
+    return g.astype(out_dtype)
+
+
+# =========================================================== embedding (emb)
+def sq_norm_emb(ids: jnp.ndarray, ds: jnp.ndarray) -> jnp.ndarray:
+    """Ghost norm for embedding lookup (Li et al. 2021):
+    ||g_i||^2 = sum_{t,t'} 1[id_t == id_t'] (ds_t . ds_t'). Returns (B,).
+    Large records: lax.map over samples (one (T,T) pair live)."""
+    if ids.ndim == 3:  # (L,B,T) stacked
+        L = ids.shape[0]
+        return sum(sq_norm_emb(ids[l], ds[l]) for l in range(L))
+    B, T = ids.shape
+    pe = dict(preferred_element_type=F32)
+    if B * T * T <= MAP_THRESHOLD:
+        eq = (ids[:, :, None] == ids[:, None, :]).astype(F32)
+        gram_g = jnp.einsum("btd,bsd->bts", ds, ds, **pe)
+        return jnp.einsum("bts,bts->b", eq, gram_g)
+
+    def one(args):
+        ib, gb = args
+        eq = (ib[:, None] == ib[None, :]).astype(F32)
+        gg = jnp.einsum("td,sd->ts", gb, gb, **pe)
+        return jnp.sum(eq * gg)
+
+    return jax.lax.map(one, (ids, ds))
+
+
+def weighted_grad_emb(ids: jnp.ndarray, C: jnp.ndarray, ds: jnp.ndarray,
+                      vocab: int, out_dtype=None) -> jnp.ndarray:
+    """G = sum_i C_i sum_t onehot(id_it) ds_it  -> (V,d). Scatter-add."""
+    out_dtype = out_dtype or ds.dtype
+    if ids.ndim == 3:  # stacked embeddings: scatter per layer
+        L = ids.shape[0]
+        w = (_f32(ds) * C[None, :, None, None]).reshape(L, -1, ds.shape[-1])
+        flat_ids = ids.reshape(L, -1)
+        out = jnp.zeros((L, vocab, ds.shape[-1]), F32)
+        out = jnp.stack([out[l].at[flat_ids[l]].add(w[l]) for l in range(L)])
+        return out.astype(out_dtype)
+    w = (_f32(ds) * C[:, None, None]).reshape(-1, ds.shape[-1])
+    flat_ids = ids.reshape(-1)
+    out = jnp.zeros((vocab, ds.shape[-1]), F32).at[flat_ids].add(w)
+    return out.astype(out_dtype)
+
+
+# ================================================================= MoE (moe)
+def _moe5(rec, ds):
+    a, mask = rec["a"], rec["mask"]
+    if a.ndim == 4:
+        return a[None], mask[None], ds[None]
+    if a.ndim == 5:
+        return a, mask, ds
+    raise ValueError(f"moe record must be 4D or 5D, got {a.shape}")
+
+
+def sq_norm_moe_ghost(rec: dict, ds: jnp.ndarray) -> jnp.ndarray:
+    """Ghost norm over capacity-gathered expert slots.
+
+    rec['a'] (B,E,C,d) are each sample's tokens routed to each expert
+    (zero-padded to capacity C, validity in rec['mask'] (B,E,C)); ds is the
+    tap cotangent in the same layout. Per-(sample, expert) Gram over the C
+    slots; norms sum over experts (the expert weights are disjoint
+    parameters). Beyond-paper extension — the paper never treats MoE.
+    Large records: lax.map over (layer,sample), one (E,C,C) Gram pair live.
+    """
+    a, mask, ds = _moe5(rec, ds)
+    G, B, E, C, _ = a.shape
+    pe = dict(preferred_element_type=F32)
+    if G * B * E * C * C <= MAP_THRESHOLD:
+        am = a * mask[..., None].astype(a.dtype)
+        dm = ds * mask[..., None].astype(ds.dtype)
+        gram_a = jnp.einsum("lbecd,lbefd->lbecf", am, am, **pe)
+        gram_g = jnp.einsum("lbecp,lbefp->lbecf", dm, dm, **pe)
+        return jnp.einsum("lbecf,lbecf->b", gram_a, gram_g, **pe)
+
+    def one(args):
+        ab, mb, gb = args
+        am = ab * mb[..., None].astype(ab.dtype)
+        dm = gb * mb[..., None].astype(gb.dtype)
+        ga = jnp.einsum("ecd,efd->ecf", am, am, **pe)
+        gg = jnp.einsum("ecp,efp->ecf", dm, dm, **pe)
+        return jnp.sum(ga * gg)
+
+    flat = lambda x: x.reshape((G * B,) + x.shape[2:])
+    n = jax.lax.map(one, (flat(a), flat(mask), flat(ds)))
+    return n.reshape(G, B).sum(0)
+
+
+def sq_norm_moe_direct(rec: dict, ds: jnp.ndarray) -> jnp.ndarray:
+    """Per-(sample,expert) gradient instantiation: g_{be} = a_be^T ds_be."""
+    a, mask, ds = _moe5(rec, ds)
+    G, B, E, _, d = a.shape
+    p = ds.shape[-1]
+    pe = dict(preferred_element_type=F32)
+    if G * B * E * d * p <= MAP_THRESHOLD:
+        dm = ds * mask[..., None].astype(ds.dtype)
+        g = jnp.einsum("lbecd,lbecp->lbedp", a, dm, **pe)
+        return jnp.einsum("lbedp,lbedp->b", g, g)
+
+    def one(args):
+        ab, mb, gb = args
+        dm = gb * mb[..., None].astype(gb.dtype)
+        g = jnp.einsum("ecd,ecp->edp", ab, dm, **pe)
+        return jnp.sum(g * g)
+
+    flat = lambda x: x.reshape((G * B,) + x.shape[2:])
+    n = jax.lax.map(one, (flat(a), flat(mask), flat(ds)))
+    return n.reshape(G, B).sum(0)
+
+
+def weighted_grad_moe(rec: dict, C: jnp.ndarray, ds: jnp.ndarray,
+                      out_dtype=None) -> jnp.ndarray:
+    """G_e = sum_b C_b a_be^T ds_be  -> (E,d,p) or (L,E,d,p)."""
+    a, mask = rec["a"], rec["mask"]
+    out_dtype = out_dtype or a.dtype
+    dsm = ds * mask[..., None].astype(ds.dtype)
+    if a.ndim == 4:
+        g = jnp.einsum("becd,b,becp->edp", a, C.astype(a.dtype), dsm,
+                       preferred_element_type=F32)
+    elif a.ndim == 5:
+        g = jnp.einsum("lbecd,b,lbecp->ledp", a, C.astype(a.dtype), dsm,
+                       preferred_element_type=F32)
+    else:
+        raise ValueError(f"moe record must be 4D or 5D, got {a.shape}")
+    return g.astype(out_dtype)
+
+
+# ====================================================== hybrid decision rule
+def ghost_space(T: int) -> int:
+    return 2 * T * T
+
+
+def direct_space(d: int, p: int) -> int:
+    return d * p
+
+
+def prefer_ghost(T: int, d: int, p: int) -> bool:
+    """Paper Sec. 3.2 layerwise rule: ghost norm iff 2 T^2 < p d."""
+    return ghost_space(T) < direct_space(d, p)

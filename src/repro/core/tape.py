@@ -1,0 +1,150 @@
+"""The tap mechanism: JAX-native book-keeping + ghost differentiation.
+
+Every generalized-linear op computes ``s = f(a, W) + tap`` where ``tap`` is an
+explicit all-zeros argument, and records its activation. The BK engine then
+runs one ``jax.vjp`` **with respect to the taps only** — the cotangent of a
+tap *is* the output gradient dL/ds of that layer, and because the weights are
+not differentiated XLA never builds the non-private parameter-gradient matmul
+(module 2b of the paper). This realizes the paper's "ghost differentiation"
+and "book-keeping" tricks natively, without PyTorch's requires_grad/origin-
+parameter machinery.
+
+Key naming: ``<path>#<kind>[.s]`` where kind is one of
+  mm   — matmul: record = activation a, layouts (B,T,d) / stacked (L,B,T,d)
+  emb  — embedding lookup: record = int ids (B,T) / (L,B,T)
+  moe  — gathered expert matmul: record = {'a': (B,E,C,d), 'mask': (B,E,C)}
+and the ``.s`` suffix marks records stacked over a leading scan (layer) axis.
+
+The parameter owned by a tapped op lives at ``<path>/w`` in the params tree.
+All other parameter leaves (biases, norm scales, decay vectors, ...) are
+handled by the per-sample-parameter (psp) route in the engine.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+class Tape:
+    """Threads taps into generalized-linear outputs and collects activations.
+
+    A Tape is created inside the traced function. ``taps=None`` runs the model
+    untapped (standard training / shape-collection pass); the Tape still
+    records ``tap_zeros`` (zeros_like of each tap site output) which under
+    ``jax.eval_shape`` yields the tap structure for free.
+    """
+
+    def __init__(self, taps: Optional[dict] = None, collect: bool = True):
+        self.taps = taps
+        self.collect = collect
+        self.acts: dict = {}
+        self.tap_zeros: dict = {}
+        self._prefix: list = []
+
+    @classmethod
+    def null(cls) -> "Tape":
+        """Inference tape: no taps, records nothing (keeps serving HLO free
+        of dead tap-zero scan outputs)."""
+        return cls(None, collect=False)
+
+    # ------------------------------------------------------------------ scope
+    class _Scope:
+        def __init__(self, tape, name):
+            self.tape, self.name = tape, name
+
+        def __enter__(self):
+            self.tape._prefix.append(self.name)
+
+        def __exit__(self, *exc):
+            self.tape._prefix.pop()
+
+    def scope(self, name: str) -> "_Scope":
+        return Tape._Scope(self, name)
+
+    def key(self, name: str, kind: str) -> str:
+        return "/".join(self._prefix + [name]) + "#" + kind
+
+    # ------------------------------------------------------------------- taps
+    def _apply_tap(self, key: str, s: jnp.ndarray) -> jnp.ndarray:
+        self.tap_zeros[key] = jnp.zeros_like(s)
+        if self.taps is not None:
+            s = s + self.taps[key]
+        return s
+
+    def record(self, name: str, kind: str, s: jnp.ndarray, act) -> jnp.ndarray:
+        """Generic tap site: returns s (+tap) and records the activation."""
+        if not self.collect:
+            return s
+        key = self.key(name, kind)
+        if key in self.acts:
+            raise ValueError(f"duplicate tap key {key!r}")
+        s = self._apply_tap(key, s)
+        self.acts[key] = act
+        return s
+
+    # --------------------------------------------------------- merging (scan)
+    def subtaps(self, name: str) -> Optional[dict]:
+        """Taps subtree for a scan scope, keys relativized. None if untapped."""
+        if self.taps is None:
+            return None
+        prefix = "/".join(self._prefix + [name]) + "/"
+        out = {}
+        for k, v in self.taps.items():
+            if k.startswith(prefix):
+                rel = k[len(prefix):]
+                if rel.endswith(".s"):  # stacked marker lives on the merged key
+                    rel = rel[:-2]
+                out[rel] = v
+        return out
+
+    def merge_stacked(self, name: str, acts: dict, tap_zeros: dict) -> None:
+        """Merge a scanned sub-tape's stacked outputs under ``name``.
+
+        ``acts``/``tap_zeros`` are the stacked (leading layer axis) trees
+        returned as scan ys; keys get prefixed and marked with ``.s``.
+        """
+        prefix = "/".join(self._prefix + [name]) + "/"
+        for k, v in acts.items():
+            self.acts[prefix + k + ".s"] = v
+        for k, v in tap_zeros.items():
+            self.tap_zeros[prefix + k + ".s"] = v
+
+
+def parse_key(key: str):
+    """-> (param_path, kind, stacked)."""
+    path, _, kindpart = key.rpartition("#")
+    stacked = kindpart.endswith(".s")
+    kind = kindpart[:-2] if stacked else kindpart
+    return path, kind, stacked
+
+
+def fix_scan_params(tree: dict, tapped: bool) -> dict:
+    """Prepare stacked block params for lax.scan under the DP psp route.
+
+    The engine broadcasts every non-ghost leaf to (B, L, ...); scan needs the
+    layer axis leading. Ghost weights (leaf key 'w' of tapped ops — the layer
+    library's convention) stay (L, ...). No-op when running untapped.
+    """
+    if not tapped:
+        return tree
+    from repro.utils.tree import flatten, unflatten  # local: avoid cycle
+
+    flat = {}
+    for path, leaf in flatten(tree).items():
+        if not path.endswith("/w") and leaf.ndim >= 2:
+            leaf = jnp.moveaxis(leaf, 0, 1)
+        flat[path] = leaf
+    return unflatten(flat)
+
+
+def subtape_run(block_fn, params_l, taps_l, *args, collect: bool = True):
+    """Helper to run a block inside a scan body with its own sub-Tape.
+
+    Returns (out, (acts, tap_zeros)) so the caller can stack them as scan ys
+    and merge with :meth:`Tape.merge_stacked`. With ``collect=False`` the
+    aux dicts are empty (inference: no dead tap-zero scan outputs).
+    """
+    tape = Tape(taps_l, collect=collect)
+    out = block_fn(params_l, tape, *args)
+    return out, (tape.acts, tape.tap_zeros)

@@ -1,0 +1,50 @@
+"""Synthetic batch construction — one source of truth for both real arrays
+(tests / examples / training) and ShapeDtypeStruct stand-ins (dry-run).
+
+Counter-based determinism: batch(step) depends only on (seed, step), so the
+pipeline resumes exactly after checkpoint restore with no iterator state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def batch_spec(cfg: ModelConfig, B: int, T: int, dtype="float32") -> dict:
+    """ShapeDtypeStructs for a training batch of this architecture."""
+    sd = jax.ShapeDtypeStruct
+    spec = {"tokens": sd((B, T), jnp.int32)}
+    if cfg.family == "vlm":
+        spec["patches"] = sd((B, cfg.patch_tokens, cfg.vit_dim), jnp.dtype(dtype))
+    if cfg.family == "encdec":
+        # seq_len is interpreted as encoder audio frames; decoder is fixed-len
+        spec = {"frames": sd((B, T, cfg.frame_dim), jnp.dtype(dtype)),
+                "tokens": sd((B, cfg.decoder_len), jnp.int32)}
+    return spec
+
+
+def make_batch(cfg: ModelConfig, B: int, T: int, seed: int = 0,
+               step: int = 0, dtype="float32") -> dict:
+    """Concrete random batch matching batch_spec."""
+    rng = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    ks = jax.random.split(rng, 3)
+    spec = batch_spec(cfg, B, T, dtype)
+    out = {}
+    for i, (name, s) in enumerate(sorted(spec.items())):
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            out[name] = jax.random.randint(ks[i % 3], s.shape, 0, cfg.vocab,
+                                           dtype=s.dtype)
+        else:
+            out[name] = jax.random.normal(ks[i % 3], s.shape, s.dtype)
+    return out
+
+
+def decode_spec(model, cfg: ModelConfig, B: int, S: int, dtype=None) -> dict:
+    """ShapeDtypeStructs for (cache, tokens, pos) of a decode step."""
+    cache = jax.eval_shape(lambda: model.init_cache(B, S, dtype=dtype))
+    return {"cache": cache,
+            "tokens": jax.ShapeDtypeStruct((B,), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}

@@ -1,0 +1,93 @@
+"""Flash-attention forward Pallas kernel (TPU): blockwise online softmax,
+GQA-aware via BlockSpec index mapping (no KV head replication in HBM).
+
+Layouts: q (B,H,T,h), k/v (B,K,S,h), out (B,H,T,h); grid (B,H,nQ,nKV) with
+the KV dim innermost/sequential; running (m, l, acc) live in VMEM scratch.
+Causal blocks strictly above the diagonal are skipped with pl.when.
+Serving prefill path; training uses XLA attention + remat.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            causal, scale, bq, bk, nkv):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    run = True if not causal else (kj * bk <= qi * bq + bq - 1)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, 0].astype(F32) * scale          # (bq, h)
+        k = k_ref[0, 0].astype(F32)                  # (bk, h)
+        v = v_ref[0, 0].astype(F32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=F32)  # (bq, bk)
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot(p, v, preferred_element_type=F32))
+        m_ref[...] = m_new
+
+    @pl.when(kj == nkv - 1)
+    def _write():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q (B,T,H,h), k/v (B,S,K,h) with H = K*G -> (B,T,H,h)."""
+    B, T, H, h = q.shape
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    qt = jnp.swapaxes(q, 1, 2)               # (B,H,T,h)
+    kt = jnp.swapaxes(k, 1, 2)               # (B,K,S,h)
+    vt = jnp.swapaxes(v, 1, 2)
+    bq, bk = min(block_q, T), min(block_k, S)
+    assert T % bq == 0 and S % bk == 0, "pad T/S to block multiples"
+    nq, nkv = T // bq, S // bk
+
+    kern = functools.partial(_kernel, causal=causal, scale=1.0 / h ** 0.5,
+                             bq=bq, bk=bk, nkv=nkv)
+    out = pl.pallas_call(
+        kern,
+        grid=(B, H, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, h), lambda b, hh, i, j: (b, hh, i, 0)),
+            pl.BlockSpec((1, 1, bk, h), lambda b, hh, i, j: (b, hh // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, h), lambda b, hh, i, j: (b, hh // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, h), lambda b, hh, i, j: (b, hh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, T, h), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, h), F32), pltpu.VMEM((bq,), F32),
+                        pltpu.VMEM((bq,), F32)],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return jnp.swapaxes(out, 1, 2)

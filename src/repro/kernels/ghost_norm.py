@@ -1,0 +1,76 @@
+"""Fused ghost-norm Pallas kernel (TPU): per-sample squared gradient norms
+
+    n_b = sum_{t,t'} (a_bt . a_bt') (g_bt . g_bt')
+
+computed tile-by-tile in VMEM, **never materializing the (B,T,T) Gram
+matrices in HBM** — this removes the paper's 2BT^2 space term (Table 3,
+module 3) entirely. Grid (B, T/bt, T/bt'); each step forms the (bt, bt')
+Gram tiles of both factors on the MXU and accumulates their Frobenius inner
+product into out[b]. Symmetry: only j<=i tiles are visited (off-diagonal
+tiles count twice).
+
+Beyond-paper: the paper's GhostClip/BK stores both Grams (2BT^2 floats).
+Here VMEM holds 2*bt*max(d,p) + bt^2 floats per step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+F32 = jnp.float32
+
+
+def _kernel(ai_ref, aj_ref, gi_ref, gj_ref, out_ref):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(j <= i)
+    def _accum():
+        ai = ai_ref[0].astype(F32)          # (bt, d)
+        aj = aj_ref[0].astype(F32)
+        gi = gi_ref[0].astype(F32)          # (bt, p)
+        gj = gj_ref[0].astype(F32)
+        gram_a = jax.lax.dot_general(ai, aj, (((1,), (1,)), ((), ())),
+                                     preferred_element_type=F32)
+        gram_g = jax.lax.dot_general(gi, gj, (((1,), (1,)), ((), ())),
+                                     preferred_element_type=F32)
+        contrib = jnp.sum(gram_a * gram_g)
+        scale = jnp.where(j == i, 1.0, 2.0)  # symmetric off-diagonal tiles
+        out_ref[0] += scale * contrib
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def ghost_norm(a, ds, block_t: int = 128, interpret: bool = False):
+    """a (B,T,d), ds (B,T,p) -> per-sample squared norms (B,) f32."""
+    B, T, d = a.shape
+    p = ds.shape[-1]
+    bt = min(block_t, T)
+    if T % bt:
+        pad = bt - T % bt
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        ds = jnp.pad(ds, ((0, 0), (0, pad), (0, 0)))
+        T = a.shape[1]
+    nt = T // bt
+
+    grid = (B, nt, nt)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bt, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bt, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bt, p), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bt, p), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda b, i, j: (b,)),
+        out_shape=jax.ShapeDtypeStruct((B,), F32),
+        interpret=interpret,
+    )(a, a, ds, ds)
+    return out

@@ -1,0 +1,60 @@
+"""Jit'd wrappers around the Pallas kernels, with the layout handling the DP
+engine expects (stacked layer dims, padding) and automatic interpret-mode on
+CPU (kernels are validated on CPU via interpret=True; TPU v5e is the compile
+target)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.clipped_grad import clipped_grad as _clipped_grad
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.ghost_norm import ghost_norm as _ghost_norm
+from repro.kernels.grad_norm_direct import grad_norm_direct as _direct
+from repro.kernels.wkv6 import wkv6 as _wkv6
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def ghost_norm_mm(a, ds, block_t: int = 128):
+    """(B,T,d)/(L,B,T,d) records -> per-sample sq norms (B,)."""
+    if a.ndim == 4:
+        L, B = a.shape[0], a.shape[1]
+        n = _ghost_norm(a.reshape((L * B,) + a.shape[2:]),
+                        ds.reshape((L * B,) + ds.shape[2:]),
+                        block_t=block_t, interpret=_interpret())
+        return n.reshape(L, B).sum(0)
+    return _ghost_norm(a, ds, block_t=block_t, interpret=_interpret())
+
+
+def direct_norm_mm(a, ds, block_d: int = 256, block_p: int = 256):
+    if a.ndim == 4:
+        L, B = a.shape[0], a.shape[1]
+        n = _direct(a.reshape((L * B,) + a.shape[2:]),
+                    ds.reshape((L * B,) + ds.shape[2:]),
+                    block_d=block_d, block_p=block_p, interpret=_interpret())
+        return n.reshape(L, B).sum(0)
+    return _direct(a, ds, block_d=block_d, block_p=block_p,
+                   interpret=_interpret())
+
+
+def clipped_grad_mm(a, C, ds, block_d: int = 256, block_p: int = 256):
+    """-> (d,p) f32, or (L,d,p) for stacked records."""
+    if a.ndim == 4:
+        fn = lambda al, dsl: _clipped_grad(al, C, dsl, block_d=block_d,
+                                           block_p=block_p,
+                                           interpret=_interpret())
+        return jax.vmap(fn)(a, ds)
+    return _clipped_grad(a, C, ds, block_d=block_d, block_p=block_p,
+                         interpret=_interpret())
+
+
+def flash_attention(q, k, v, causal=True, block_q=128, block_k=128):
+    return _flash(q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+                  interpret=_interpret())
+
+
+def wkv6(r, k, v, w, u, chunk: int = 16):
+    return _wkv6(r, k, v, w, u, chunk=chunk, interpret=_interpret())

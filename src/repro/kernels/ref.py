@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function is the mathematical definition, written for clarity not speed;
+kernel tests sweep shapes/dtypes and assert_allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def ghost_norm_ref(a, ds):
+    """Per-sample sq norm via the ghost trick. a (B,T,d), ds (B,T,p) -> (B,)."""
+    a, ds = a.astype(F32), ds.astype(F32)
+    ga = jnp.einsum("btd,bsd->bts", a, a)
+    gg = jnp.einsum("btp,bsp->bts", ds, ds)
+    return jnp.einsum("bts,bts->b", ga, gg)
+
+
+def grad_norm_direct_ref(a, ds):
+    """Per-sample sq norm via instantiation. a (B,T,d), ds (B,T,p) -> (B,)."""
+    g = jnp.einsum("btd,btp->bdp", a.astype(F32), ds.astype(F32))
+    return jnp.einsum("bdp,bdp->b", g, g)
+
+
+def clipped_grad_ref(a, C, ds):
+    """G = a^T diag(C) ds. a (B,T,d), C (B,), ds (B,T,p) -> (d,p) f32."""
+    return jnp.einsum("btd,b,btp->dp", a.astype(F32), C.astype(F32),
+                      ds.astype(F32))
+
+
+def flash_attention_ref(q, k, v, causal=True):
+    """q (B,T,H,h), k/v (B,S,K,h), H = K*G -> (B,T,H,h). Plain softmax."""
+    B, T, H, h = q.shape
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, T, K, G, h).astype(F32)
+    logits = jnp.einsum("btkgh,bskh->bkgts", qg, k.astype(F32)) / (h ** 0.5)
+    if causal:
+        mask = jnp.arange(T)[:, None] >= jnp.arange(S)[None, :]
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgts,bskh->btkgh", p, v.astype(F32))
+    return out.reshape(B, T, H, h).astype(q.dtype)
+
+
+def wkv6_ref(r, k, v, w, u):
+    """RWKV6 recurrence. r,k,v,w (B,T,H,h); u (H,h) -> (B,T,H,h) f32."""
+    from repro.models.rwkv6 import wkv6_ref as _m
+    return _m(r, k, v, w, u)

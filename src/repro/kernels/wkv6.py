@@ -1,0 +1,105 @@
+"""Chunked RWKV6 recurrence Pallas kernel (TPU).
+
+Within a chunk of c tokens the recurrence is re-expressed as matmuls
+(MXU-friendly) instead of c sequential steps:
+
+    P_t   = prod_{s<=t} w_s                      (per-channel, cumprod)
+    out_t = (r_t*P_{t-1}) S_in
+            + sum_{s<t} <r_t*P_{t-1}, k_s/P_s> v_s      (strict-lower mask)
+            + <r_t*u, k_t> v_t                          (diagonal bonus)
+    S_out = diag(P_c) S_in + (k/P * P_c)^T V
+
+The cumulative log-decay is computed with a lower-triangular ones matmul
+(MXU) rather than a serial scan. State S (h,h) persists in VMEM scratch
+across the sequential chunk grid dimension. Chunk size is kept small (16-32)
+so the P ratios stay in f32 range (decays are clamped).
+
+Layouts: r,k,v,w (B,H,T,h) [wrapper transposes from (B,T,H,h)], u (H,h).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+MIN_LOGW = -20.0  # per-token log-decay clamp; exp(-20*c) stays > f32 tiny for c<=4... chunk guard below
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_ref, *, c, h):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0, 0].astype(F32)               # (c, h)
+    k = k_ref[0, 0].astype(F32)
+    v = v_ref[0, 0].astype(F32)
+    w = w_ref[0, 0].astype(F32)
+    u = u_ref[0].astype(F32)                  # (h,)
+    S = s_ref[...]                            # (h, h)
+
+    logw = jnp.maximum(jnp.log(jnp.maximum(w, 1e-30)), MIN_LOGW)
+    tril_inc = (jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+                >= jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)).astype(F32)
+    cum = jax.lax.dot(tril_inc, logw, preferred_element_type=F32)  # (c,h) inclusive
+    P = jnp.exp(cum)                          # P_t
+    P_prev = jnp.exp(cum - logw)              # P_{t-1}
+
+    r_t = r * P_prev                          # (c,h)
+    k_t = k / jnp.maximum(P, 1e-30)           # (c,h)
+
+    A = jax.lax.dot_general(r_t, k_t, (((1,), (1,)), ((), ())),
+                            preferred_element_type=F32)      # (c,c)
+    strict = (jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+              > jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)).astype(F32)
+    diag_bonus = jnp.sum(r * u[None, :] * k, axis=1)         # (c,)
+    eye = (jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+           == jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)).astype(F32)
+    Af = A * strict + eye * diag_bonus[:, None]
+    out = (jax.lax.dot(Af, v, preferred_element_type=F32)
+           + jax.lax.dot(r_t, S, preferred_element_type=F32))
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+
+    Pc = P[-1]                                # (h,)
+    k_scaled = k_t * Pc[None, :]
+    s_ref[...] = (Pc[:, None] * S
+                  + jax.lax.dot_general(k_scaled, v, (((0,), (0,)), ((), ())),
+                                        preferred_element_type=F32))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, w, u, chunk: int = 16, interpret: bool = False):
+    """r,k,v,w (B,T,H,h); u (H,h) -> (B,T,H,h) f32 output."""
+    B, T, H, h = r.shape
+    c = min(chunk, T)
+    pad = (c - T % c) % c
+    if pad:
+        zp = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zp(r), zp(k), zp(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    Tp = r.shape[1]
+    tr = lambda x: jnp.swapaxes(x, 1, 2)      # (B,H,T,h)
+
+    kern = functools.partial(_kernel, c=c, h=h)
+    out = pl.pallas_call(
+        kern,
+        grid=(B, H, Tp // c),
+        in_specs=[
+            pl.BlockSpec((1, 1, c, h), lambda b, hh, t: (b, hh, t, 0)),
+            pl.BlockSpec((1, 1, c, h), lambda b, hh, t: (b, hh, t, 0)),
+            pl.BlockSpec((1, 1, c, h), lambda b, hh, t: (b, hh, t, 0)),
+            pl.BlockSpec((1, 1, c, h), lambda b, hh, t: (b, hh, t, 0)),
+            pl.BlockSpec((1, h), lambda b, hh, t: (hh, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, c, h), lambda b, hh, t: (b, hh, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Tp, h), F32),
+        scratch_shapes=[pltpu.VMEM((h, h), F32)],
+        interpret=interpret,
+    )(tr(r), tr(k), tr(v), tr(w), u)
+    out = jnp.swapaxes(out, 1, 2)
+    return out[:, :T]

@@ -1,0 +1,126 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, record memory / cost / collective analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multipod] [--force]
+
+The XLA_FLAGS line above MUST run before any other import touches jax: the
+dry-run (and only the dry-run) builds the 512-chip mesh out of host devices.
+Results land in experiments/dryrun/<mesh>/<arch>__<shape>.json and feed
+EXPERIMENTS.md §Dry-run and the §Roofline table."""
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs.base import SHAPES            # noqa: E402
+from repro.configs.registry import get_config, list_archs  # noqa: E402
+from repro.launch.mesh import make_production_mesh          # noqa: E402
+from repro.launch.steps import plan_cell, skip_reason       # noqa: E402
+from repro.utils.hlo import analyze_hlo                     # noqa: E402
+
+OUT_ROOT = os.path.join(os.path.dirname(__file__), "../../../experiments/dryrun")
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
+             force: bool = False, dp_mode: str = "bk") -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(out_dir, f"{arch}__{shape}.json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    rec = {"arch": arch, "shape": shape,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "dp_mode": dp_mode, "status": "ok"}
+    cfg = get_config(arch)
+    reason = skip_reason(cfg, SHAPES[shape])
+    if reason:
+        rec.update(status="skip", reason=reason)
+    else:
+        try:
+            mesh = make_production_mesh(multi_pod=multi_pod)
+            t0 = time.time()
+            plan = plan_cell(arch, shape, mesh)
+            lowered = plan.lower()
+            rec["lower_s"] = round(time.time() - t0, 1)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 1)
+            ma = compiled.memory_analysis()
+            rec["memory"] = {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "peak_bytes": getattr(ma, "peak_memory_in_bytes", 0),
+            }
+            ca = compiled.cost_analysis() or {}
+            rec["cost"] = {k: ca[k] for k in ("flops", "bytes accessed")
+                           if k in ca}
+            # trip-aware totals (XLA cost_analysis counts scan bodies once)
+            hla = analyze_hlo(compiled.as_text())
+            rec["hlo"] = {"flops": hla["flops"],
+                          "traffic_bytes": hla["traffic_bytes"]}
+            rec["collectives"] = hla["collectives"]
+            rec["note"] = plan.note
+            rec["kind"] = plan.kind
+        except Exception as e:  # a failing cell is a bug to fix, keep record
+            rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                       trace=traceback.format_exc()[-4000:])
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs())
+    ap.add_argument("--shape", choices=sorted(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--dp-mode", default="bk")
+    args = ap.parse_args()
+
+    mesh_tag = "multipod_2x16x16" if args.multipod else "singlepod_16x16"
+    out_dir = os.path.normpath(os.path.join(OUT_ROOT, mesh_tag))
+    cells = ([(args.arch, args.shape)] if args.arch and args.shape else
+             [(a, s) for a in list_archs() for s in sorted(SHAPES)])
+    if not args.all and not (args.arch and args.shape):
+        ap.error("pass --arch+--shape or --all")
+
+    n_ok = n_skip = n_err = 0
+    for arch, shape in cells:
+        rec = run_cell(arch, shape, args.multipod, out_dir, args.force,
+                       args.dp_mode)
+        tag = rec["status"]
+        n_ok += tag == "ok"
+        n_skip += tag == "skip"
+        n_err += tag == "error"
+        if tag == "ok":
+            mb = rec["memory"]
+            print(f"[{tag}] {arch:22s} {shape:12s} "
+                  f"args={mb['argument_bytes']/2**30:.2f}GiB "
+                  f"temp={mb['temp_bytes']/2**30:.2f}GiB "
+                  f"flops/dev={rec['hlo']['flops']:.3g} "
+                  f"traffic={rec['hlo']['traffic_bytes']/2**30:.1f}GiB "
+                  f"coll={rec['collectives']['total']/2**20:.1f}MiB "
+                  f"(lower {rec.get('lower_s')}s compile {rec.get('compile_s')}s)",
+                  flush=True)
+        elif tag == "skip":
+            print(f"[skip] {arch:22s} {shape:12s} {rec['reason'][:80]}", flush=True)
+        else:
+            print(f"[ERR ] {arch:22s} {shape:12s} {rec['error'][:160]}", flush=True)
+    print(f"done: {n_ok} ok, {n_skip} skip, {n_err} error")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) — 256 chips of TPU v5e.
+Multi-pod:  (pod=2, data=16, model=16) — 512 chips; the pod axis is pure
+data parallelism over DCN (gradient all-reduce optionally 8-bit compressed,
+see repro.runtime.compression), FSDP+TP live on the ICI axes.
+
+Defined as functions (never module-level) so importing this module does not
+touch jax device state — the dry-run sets XLA_FLAGS before first jax use.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(1, 1), axes=("data", "model")):
+    """Degenerate mesh for CPU tests."""
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes(mesh) -> tuple:
+    """Axes the batch dim shards over (pod included when present)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

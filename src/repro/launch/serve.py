@@ -1,0 +1,63 @@
+"""Serving driver: batched prefill + autoregressive decode with KV cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+        --batch 4 --prompt-len 16 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import build, get_config, list_archs, smoke_config
+
+
+def generate(model, params, prompts, gen_len: int, cache_len: int = 0):
+    """prompts (B, Tp) int32 -> (B, Tp+gen) greedy continuation."""
+    cfg = model.cfg
+    B, Tp = prompts.shape
+    S = cache_len or (Tp + gen_len)
+    cache = model.init_cache(B, S)
+
+    decode = jax.jit(model.decode_step)
+    tokens = prompts
+    # teacher-forced prefill through the decode path (exercises the cache)
+    last = None
+    for i in range(Tp):
+        last, cache = decode(params, cache, tokens[:, i], jnp.asarray(i, jnp.int32))
+    out = [tokens]
+    nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
+    for i in range(Tp, Tp + gen_len):
+        out.append(nxt[:, None])
+        last, cache = decode(params, cache, nxt, jnp.asarray(i, jnp.int32))
+        nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
+    return jnp.concatenate(out, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs(), default="qwen2-1.5b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0, cfg.vocab)
+    t0 = time.time()
+    out = generate(model, params, prompts, args.gen)
+    dt = time.time() - t0
+    toks = args.batch * (args.prompt_len + args.gen)
+    print(f"generated {out.shape} in {dt:.2f}s "
+          f"({toks / dt:.1f} tok/s incl. compile)")
+    print(out[0])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,138 @@
+"""Sharding rules: param-path regex -> PartitionSpec over the trailing dims
+(leading stacked/layer dims padded with None). FSDP on 'data', TP on
+'model'; the 'pod' axis is pure DP (params replicated across pods).
+
+MaxText-style first-match-wins table; 2D fallback shards the larger matmul
+dim on 'model' and the other on 'data' (FSDP+TP)."""
+from __future__ import annotations
+
+import re
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.utils.tree import flatten, unflatten
+
+# (regex on param path, spec for the TRAILING dims)
+RULES = [
+    # d over 'model' (not V): embedding gathers then need no cross-shard
+    # indexing (SPMD gather on a vocab-sharded table falls back to full
+    # rematerialization), and odd vocab sizes (32001, 51865, 92553) need no
+    # padding. The table is replicated over 'data' (<=300MB/chip at 405B).
+    (r"(^|/)embed/w$", (None, "model")),            # (V, d)
+    (r"(^|/)head/w$", ("data", "model")),           # (d, V)
+    (r"experts/up/w$", ("model", "data", None)),    # (E, d, ff) expert-parallel
+    (r"experts/down/w$", ("model", None, "data")),  # (E, ff, d)
+    (r"(^|/)router/w$", ("data", None)),            # (d, E)
+    (r"(^|/)qkv/w$", ("data", "model")),
+    (r"(^|/)o/w$", ("model", "data")),
+    (r"(^|/)fuse_o/w$", ("model", "data")),
+    (r"(^|/)up/w$", ("data", "model")),
+    (r"(^|/)down/w$", ("model", "data")),
+    (r"(^|/)value/w$", ("model", "data")),          # rwkv ffn down-proj
+    (r"(^|/)(key|receptance|r|k|v|g|xz)/w$", ("data", "model")),
+    (r"(^|/)(projector|frontend)/w$", (None, "model")),
+    (r"xattn/(q|kv)/w$", ("data", "model")),
+    (r"xattn/o/w$", ("model", "data")),
+    (r"(^|/)(wa|tm_w1|bcdt)/w$", ("data", None)),
+    (r"(^|/)(wb|tm_w2_\d)/w$", (None, "model")),
+    (r"(^|/)pos/e$", (None, None)),
+    (r"(^|/)meta/m$", (None, None)),
+]
+
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, (tuple, list)):
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axes]
+
+
+def sanitize(spec: P, shape, mesh) -> P:
+    """Drop sharding on dims the mesh axes don't divide (odd vocab sizes,
+    head counts like 25/40, batch=1) — jit arguments require divisibility."""
+    tail = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
+    out = tuple(a if a is None or shape[i] % _axis_size(mesh, a) == 0 else None
+                for i, a in enumerate(tail))
+    return P(*out)
+
+
+def spec_for(path: str, ndim: int) -> P:
+    for pat, tail in RULES:
+        if re.search(pat, path):
+            tail = tuple(tail)
+            if len(tail) > ndim:  # e.g. scalar/vector param matched broadly
+                tail = tail[-ndim:]
+            return P(*((None,) * (ndim - len(tail)) + tail))
+    if path.endswith("/w") and ndim >= 2:  # fallback matmul rule
+        return P(*((None,) * (ndim - 2) + ("data", "model")))
+    return P()  # vectors/scalars replicated
+
+
+def param_pspecs(params, mesh=None) -> dict:
+    out = {}
+    for p, v in flatten(params).items():
+        spec = spec_for(p, v.ndim)
+        if mesh is not None:
+            spec = sanitize(spec, v.shape, mesh)
+        out[p] = spec
+    return unflatten(out)
+
+
+def opt_state_pspecs(opt_name: str, params, param_specs) -> dict:
+    """Optimizer-state specs mirror the param specs (adafactor drops the
+    factored dim)."""
+    pf = flatten(param_specs)
+    if opt_name in ("adamw", "lamb"):
+        return {"m": param_specs, "v": param_specs}
+    if opt_name == "sgd":
+        return {"m": param_specs}
+    if opt_name == "adafactor":
+        out = {}
+        for p, v in flatten(params).items():
+            spec = tuple(pf[p]) + (None,) * (v.ndim - len(tuple(pf[p])))
+            if v.ndim >= 2:
+                out[p + "/vr"] = P(*spec[:-1])
+                out[p + "/vc"] = P(*(spec[:-2] + spec[-1:]))
+            else:
+                out[p + "/v"] = P(*spec)
+        return {"s": unflatten(out)}
+    raise ValueError(opt_name)
+
+
+def batch_pspecs(batch_like, mesh) -> dict:
+    """Shard the leading (batch) dim of every input over pod+data."""
+    from repro.launch.mesh import batch_axes
+    ba = batch_axes(mesh)
+    return jax.tree_util.tree_map(
+        lambda x: sanitize(P(*((ba,) + (None,) * (len(x.shape) - 1))),
+                           x.shape, mesh), batch_like)
+
+
+def cache_pspecs(cache_like, mesh) -> dict:
+    """Decode caches: (L, B, S|H, ...) — batch dim over pod+data; the long
+    axis (KV sequence, rwkv heads, ssm heads) over 'model'."""
+    from repro.launch.mesh import batch_axes
+    ba = batch_axes(mesh)
+
+    def one(x):
+        nd = len(x.shape)
+        if nd >= 4:  # (L,B,S,K,h) kv cache or (L,B,H,h,h) state
+            spec = P(*((None, ba, "model") + (None,) * (nd - 3)))
+        elif nd == 3:  # (L,B,d) shift states
+            spec = P(None, ba, "model")
+        else:
+            spec = P()
+        return sanitize(spec, x.shape, mesh)
+
+    return jax.tree_util.tree_map(one, cache_like)
+
+
+def named(mesh, pspecs):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), pspecs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,147 @@
+"""Step builders: (arch x shape x mesh) -> jit-able function + abstract args
++ shardings. Used by the dry-run (lower/compile on ShapeDtypeStructs) and by
+the real train/serve drivers."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+from repro.configs.registry import build, get_config
+from repro.core.bk import DPConfig
+from repro.data.synthetic import batch_spec
+from repro.launch import sharding as sh
+from repro.optim.accumulate import accumulated_private_grad
+from repro.optim.optimizers import make_optimizer
+
+# physical (micro) batch for train_4k, tuned so the per-device book-keeping
+# footprint stays within v5e HBM (see EXPERIMENTS.md §Dry-run)
+TRAIN_MICROBATCH = {
+    # >= data-axis size (16) so the microbatch stays shardable over 'data'
+    "llama3-405b": 16, "internvl2-26b": 16, "qwen3-14b": 16,
+    "deepseek-moe-16b": 16, "moonshot-v1-16b-a3b": 16,
+    "qwen2-1.5b": 32, "qwen2.5-3b": 32, "whisper-small": 32,
+    "rwkv6-3b": 16, "hymba-1.5b": 16,
+}
+TRAIN_OPTIMIZER = {"llama3-405b": "adafactor"}
+SUBQUADRATIC = ("ssm", "hybrid")
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> Optional[str]:
+    if shape.name == "long_500k" and cfg.family not in SUBQUADRATIC:
+        return ("full-attention arch: 524k dense-KV decode is quadratic-cost/"
+                "unbounded-KV by construction; run only for SSM/hybrid "
+                "(DESIGN.md §4)")
+    return None
+
+
+@dataclass
+class CellPlan:
+    arch: str
+    shape: str
+    kind: str
+    fn: Callable
+    args: tuple                  # ShapeDtypeStructs
+    in_shardings: tuple
+    donate: tuple = ()
+    note: str = ""
+
+    def jitted(self):
+        return jax.jit(self.fn, in_shardings=self.in_shardings,
+                       donate_argnums=self.donate)
+
+    def lower(self):
+        mesh = None
+        for sh in jax.tree_util.tree_leaves(self.in_shardings):
+            if hasattr(sh, "mesh"):
+                mesh = sh.mesh
+                break
+        if mesh is not None:
+            with jax.set_mesh(mesh):
+                return self.jitted().lower(*self.args)
+        return self.jitted().lower(*self.args)
+
+
+def _key_struct():
+    return jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+
+def _params_struct(model):
+    return jax.eval_shape(model.init, _key_struct())
+
+
+def plan_cell(arch: str, shape_name: str, mesh, dp: Optional[DPConfig] = None,
+              microbatch: Optional[int] = None, cfg_patch: Optional[dict] = None,
+              optimizer: Optional[str] = None) -> CellPlan:
+    cfg = get_config(arch)
+    if cfg_patch:
+        cfg = cfg.with_(**cfg_patch)
+    shape = SHAPES[shape_name]
+    reason = skip_reason(cfg, shape)
+    if reason:
+        raise LookupError(reason)
+    model = build(cfg)
+    params = _params_struct(model)
+    pspec = sh.param_pspecs(params, mesh)
+    psh = sh.named(mesh, pspec)
+
+    if shape.kind == "train":
+        # bk-mixopt IS the paper's algorithm at T=4096 (§3: large-T needs the
+        # layerwise hybrid; base-BK's 2BT^2 Grams are the wrong branch here)
+        dp = dp or DPConfig(mode="bk-mixopt", clipping="automatic", sigma=1.0)
+        mb = microbatch or TRAIN_MICROBATCH.get(arch, 16)
+        opt_name = optimizer or TRAIN_OPTIMIZER.get(arch, "adamw")
+        opt = make_optimizer(opt_name, lambda s: jnp.asarray(1e-4, jnp.float32))
+        bspec = batch_spec(cfg, shape.global_batch, shape.seq_len,
+                           dtype=cfg.dtype)
+        ostate = jax.eval_shape(opt.init, params)
+        osh = sh.named(mesh, sh.opt_state_pspecs(opt_name, params, pspec))
+        bsh = sh.named(mesh, sh.batch_pspecs(bspec, mesh))
+
+        def train_step(p, o, step, batch, rng):
+            grads, aux = accumulated_private_grad(model.apply, p, batch, rng,
+                                                  dp, mb)
+            new_p, new_o = opt.update(grads, o, p, step)
+            return new_p, new_o, aux["loss"]
+
+        return CellPlan(
+            arch, shape_name, "train", train_step,
+            (params, ostate, jax.ShapeDtypeStruct((), jnp.int32), bspec,
+             _key_struct()),
+            (psh, osh, None, bsh, None), donate=(0, 1),
+            note=f"dp={dp.mode} micro={mb} opt={opt_name}")
+
+    if shape.kind == "prefill":
+        bspec = batch_spec(cfg, shape.global_batch, shape.seq_len,
+                           dtype=cfg.dtype)
+        bsh = sh.named(mesh, sh.batch_pspecs(bspec, mesh))
+        if cfg.family == "encdec":
+            fn = lambda p, b: model.prefill(p, b["frames"], b["tokens"])
+        elif cfg.family == "vlm":
+            fn = lambda p, b: model.prefill(p, b["tokens"], b["patches"])
+        else:
+            fn = lambda p, b: model.prefill(p, b["tokens"])
+        return CellPlan(arch, shape_name, "prefill", fn, (params, bspec),
+                        (psh, bsh))
+
+    # decode
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        cache = jax.eval_shape(lambda: model.init_cache(B, S, Tf=S))
+    else:
+        cache = jax.eval_shape(lambda: model.init_cache(B, S))
+    csh = sh.named(mesh, sh.cache_pspecs(cache, mesh))
+    toks = jax.ShapeDtypeStruct((B,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def serve_step(p, c, t, i):
+        return model.decode_step(p, c, t, i)
+
+    tsh = sh.named(mesh, sh.batch_pspecs(toks, mesh))
+    return CellPlan(arch, shape_name, "decode", serve_step,
+                    (params, cache, toks, pos), (psh, csh, tsh, None),
+                    donate=(1,))

@@ -1,0 +1,138 @@
+"""End-to-end DP training driver: data pipeline -> BK private gradient ->
+optimizer -> checkpoint/restart, with preemption + heartbeat guards.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --smoke \
+        --steps 50 --batch 8 --seq 64 --epsilon 3.0
+
+Runs on whatever devices exist (CPU here, a pod via the same pjit path on
+TPU — pass --mesh data,model sizes)."""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TrainConfig
+from repro.configs.registry import build, get_config, list_archs, smoke_config
+from repro.core.accounting import budget_for
+from repro.core.bk import DPConfig
+from repro.data.pipeline import Pipeline, PipelineConfig
+from repro.launch import sharding as sh
+from repro.optim.accumulate import accumulated_private_grad
+from repro.optim.optimizers import make_optimizer
+from repro.optim.schedules import make_schedule
+from repro.runtime.fault_tolerance import (CheckpointManager, Heartbeat,
+                                           PreemptionGuard)
+
+
+def train(model_cfg, tc: TrainConfig, dp: DPConfig, log=print,
+          dataset_size: int = 0, target_epsilon: float = 0.0,
+          delta: float = 1e-5):
+    model = build(model_cfg)
+    if target_epsilon > 0 and dataset_size > 0 and dp.sigma == 0.0:
+        budget = budget_for(target_epsilon, delta, tc.global_batch,
+                            dataset_size, tc.steps * tc.global_batch / dataset_size)
+        dp = DPConfig(**{**dp.__dict__, "sigma": budget.sigma})
+        log(f"calibrated sigma={budget.sigma:.3f} for eps={budget.epsilon:.2f}")
+
+    opt = make_optimizer(tc.optimizer,
+                         make_schedule(tc.lr_schedule, tc.lr, tc.warmup, tc.steps),
+                         weight_decay=tc.weight_decay)
+    pipe = Pipeline(model_cfg, PipelineConfig(tc.global_batch, tc.seq_len,
+                                              seed=tc.seed))
+
+    guard = PreemptionGuard()
+    hb = Heartbeat(timeout_s=600.0)
+    mgr = (CheckpointManager(tc.checkpoint_dir, every=tc.checkpoint_every,
+                             keep=tc.keep_checkpoints)
+           if tc.checkpoint_dir else None)
+
+    # ---- init or resume -----------------------------------------------------
+    start = 0
+    params = model.init(jax.random.PRNGKey(tc.seed))
+    opt_state = opt.init(params)
+    if mgr is not None:
+        state, step = mgr.resume(template={"params": params,
+                                           "opt": opt_state,
+                                           "step": np.asarray(0)})
+        if state is not None:
+            params, opt_state = state["params"], state["opt"]
+            start = int(state["step"]) + 1
+            log(f"resumed from step {start - 1}")
+
+    @jax.jit
+    def step_fn(p, o, i, batch, rng):
+        if dp.mode == "nonprivate":
+            from repro.core.engine import make_grad_fn
+            grads, aux = make_grad_fn(model.apply, dp)(p, batch, rng)
+        else:
+            grads, aux = accumulated_private_grad(model.apply, p, batch, rng,
+                                                  dp, tc.microbatch)
+        new_p, new_o = opt.update(grads, o, p, i)
+        return new_p, new_o, aux["loss"]
+
+    losses = []
+    rng0 = jax.random.PRNGKey(tc.seed + 1)
+    for step in range(start, tc.steps):
+        t0 = time.time()
+        batch = pipe.batch(step)
+        rng = jax.random.fold_in(rng0, step)
+        params, opt_state, loss = step_fn(params, opt_state,
+                                          jnp.asarray(step), batch, rng)
+        losses.append(float(loss))
+        hb.beat(step)
+        if mgr is not None:
+            mgr.maybe_save(step, {"params": params, "opt": opt_state,
+                                  "step": np.asarray(step)})
+        if guard.should_stop():
+            if mgr is not None:
+                mgr.maybe_save(step, {"params": params, "opt": opt_state,
+                                      "step": np.asarray(step)}, force=True)
+            log(f"preempted at step {step}; checkpoint saved")
+            break
+        if step % 10 == 0 or step == tc.steps - 1:
+            log(f"step {step:5d} loss {float(loss):.4f} "
+                f"({time.time() - t0:.2f}s)")
+    if mgr is not None:
+        mgr.wait()
+    hb.close()
+    return params, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs(), default="qwen2-1.5b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--mode", default="bk-mixopt")
+    ap.add_argument("--clipping", default="automatic")
+    ap.add_argument("--sigma", type=float, default=0.0)
+    ap.add_argument("--epsilon", type=float, default=0.0)
+    ap.add_argument("--dataset-size", type=int, default=50000)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    args = ap.parse_args()
+
+    mc = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mc = mc.with_(dtype="float32", param_dtype="float32") if args.smoke else mc
+    tc = TrainConfig(global_batch=args.batch, microbatch=args.microbatch,
+                     seq_len=args.seq, steps=args.steps, lr=args.lr,
+                     optimizer=args.optimizer,
+                     checkpoint_dir=args.ckpt_dir,
+                     checkpoint_every=args.ckpt_every)
+    dp = DPConfig(mode=args.mode, clipping=args.clipping, sigma=args.sigma)
+    train(mc, tc, dp, dataset_size=args.dataset_size,
+          target_epsilon=args.epsilon)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""Attention math (param-free; projections live in the blocks).
+
+Supports GQA, causal / bidirectional / sliding-window masks, q-chunked
+attention (bounded memory for long prefill), and single-step decode against a
+KV cache. All softmax arithmetic in float32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask(q_pos, k_pos, causal: bool, window: int):
+    """q_pos (..., Tq), k_pos (..., Tk) -> bool (..., Tq, Tk). window may be a
+    traced scalar (0 = unlimited)."""
+    d = q_pos[..., :, None] - k_pos[..., None, :]
+    m = (d >= 0) if causal else jnp.ones(d.shape, bool)
+    w = jnp.asarray(window)
+    m = jnp.where(w > 0, m & (d < w), m)
+    return m
+
+
+def _attend(q, k, v, mask):
+    """q (B,Tq,K,G,h), k/v (B,Tk,K,h), mask (B?,Tq,Tk) -> (B,Tq,K,G,h).
+
+    Softmax statistics in f32; the normalized probs are cast back to the
+    model dtype before the PV matmul (halves the dominant (T,S) HBM term and
+    uses the bf16 MXU path — standard flash-attention practice)."""
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    logits = jnp.einsum("btkgh,bskh->bkgts", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if mask.ndim == 2:
+        mask = mask[None]
+    logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgts,bskh->btkgh", probs, v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(v.dtype)
+
+
+def multihead_attention(q, k, v, *, causal=True, window=0, chunk=0):
+    """q (B,Tq,H,h), k/v (B,Tk,K,h) with H = K*G (GQA). -> (B,Tq,H,h)."""
+    B, T, H, h = q.shape
+    Tk, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, T, K, G, h)
+    q_pos = jnp.arange(T)
+    k_pos = jnp.arange(Tk)
+
+    if chunk and T % chunk == 0 and T > chunk:
+        nc = T // chunk
+
+        def one(qc_and_pos):
+            qc, qp = qc_and_pos  # (B,chunk,K,G,h), (chunk,)
+            m = _mask(qp, k_pos, causal, window)
+            return _attend(qc, k, v, m)
+
+        qcs = jnp.moveaxis(qg.reshape(B, nc, chunk, K, G, h), 1, 0)
+        out = jax.lax.map(one, (qcs, q_pos.reshape(nc, chunk)))
+        out = jnp.moveaxis(out, 0, 1).reshape(B, T, H, h)
+        return out
+
+    m = _mask(q_pos, k_pos, causal, window)
+    return _attend(qg, k, v, m).reshape(B, T, H, h)
+
+
+def banded_attention(q, k, v, *, window: int, chunk: int = 0):
+    """Causal sliding-window attention with a STATIC window: each query chunk
+    only reads the (window + chunk)-wide key band — O(T * window) compute and
+    memory instead of O(T^2)-then-mask. q (B,T,H,h), k/v (B,T,K,h)."""
+    B, T, H, h = q.shape
+    K = k.shape[2]
+    G = H // K
+    chunk = chunk or min(T, max(128, window // 2))
+    if T % chunk or T <= chunk:
+        qg = q.reshape(B, T, K, G, h)
+        m = _mask(jnp.arange(T), jnp.arange(T), True, window)
+        return _attend(qg, k, v, m).reshape(B, T, H, h)
+    nc = T // chunk
+    band = window + chunk
+    qg = q.reshape(B, nc, chunk, K, G, h)
+
+    def one(args):
+        qc, ci = args                                   # (B,chunk,K,G,h), ()
+        start = jnp.maximum(0, (ci + 1) * chunk - band)
+        kb = jax.lax.dynamic_slice_in_dim(k, start, min(band, T), axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v, start, min(band, T), axis=1)
+        q_pos = ci * chunk + jnp.arange(chunk)
+        k_pos = start + jnp.arange(kb.shape[1])
+        m = _mask(q_pos, k_pos, True, window)
+        return _attend(qc, kb, vb, m)
+
+    out = jax.lax.map(one, (jnp.moveaxis(qg, 1, 0), jnp.arange(nc)))
+    return jnp.moveaxis(out, 0, 1).reshape(B, T, H, h)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window=0):
+    """One-step decode. q (B,1,H,h); caches (B,S,K,h); pos scalar index of the
+    current token (cache[pos] is the current token's kv). -> (B,1,H,h)."""
+    B, _, H, h = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    qg = q.reshape(B, 1, K, G, h)
+    k_pos = jnp.arange(S)
+    valid = k_pos <= pos
+    w = jnp.asarray(window)
+    valid = jnp.where(w > 0, valid & (pos - k_pos < w), valid)
+    m = valid[None, None, :]  # (1,1,S) -> broadcast (B,Tq=1,S)
+    return _attend(qg, k_cache, v_cache, jnp.broadcast_to(m, (B, 1, S))).reshape(B, 1, H, h)
+
+
+def update_cache(cache_k, cache_v, k_new, v_new, pos):
+    """Write k/v (B,1,K,h) at index pos. Returns updated caches."""
+    ck = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new.astype(cache_k.dtype), pos, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new.astype(cache_v.dtype), pos, axis=1)
+    return ck, cv

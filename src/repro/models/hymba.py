@@ -1,0 +1,232 @@
+"""Hymba (arXiv:2411.13676) — hybrid-head blocks running attention and a
+Mamba-style SSM **in parallel** on the same input, outputs mean-fused after
+per-branch normalization, plus learnable meta tokens prepended to the
+sequence.
+
+Layer layout follows the paper: sliding-window attention everywhere except
+three GLOBAL attention layers (first / middle / last). The SWA layers are
+lax.scan'd in two segments around the middle global layer, which keeps the
+window STATIC so SWA uses banded attention (O(T*window), never T^2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.tape import Tape, fix_scan_params, subtape_run
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.attention import (banded_attention, decode_attention,
+                                    multihead_attention, update_cache)
+from repro.models.transformer import attn_init, _qkv, mlp_init, mlp_apply
+
+
+def block_init(rng, cfg: ModelConfig):
+    ks = jax.random.split(rng, 6)
+    d = cfg.d_model
+    d_inner = cfg.ssm_heads * cfg.hd
+    dt = jnp.dtype(cfg.param_dtype)
+    attn = attn_init(ks[1], cfg)
+    del attn["o"]  # fused output projection (fuse_o) replaces per-branch o
+    return {
+        "ln1": L.rmsnorm_init(ks[0], d, dt),
+        "attn": attn,
+        "ssm": S.ssm_init(ks[2], cfg),
+        "na": L.rmsnorm_init(ks[0], d_inner, dt),
+        "ns": L.rmsnorm_init(ks[0], d_inner, dt),
+        "fuse_o": L.linear_init(ks[3], d_inner, d, dt),
+        "ln2": L.rmsnorm_init(ks[0], d, dt),
+        "mlp": mlp_init(ks[4], cfg),
+    }
+
+
+def block_apply(p, tape, x, cfg: ModelConfig, cos, sin, window: int):
+    """window: STATIC int (0 = global attention for this layer)."""
+    B, T = x.shape[0], x.shape[1]
+    xn = L.rmsnorm(p["ln1"], x)
+    with tape.scope("attn"):
+        q, k, v = _qkv(p["attn"], tape, xn, cfg, cos, sin)
+        if cfg.seq_shard_attn and not window:
+            from jax.sharding import PartitionSpec as P
+            q = jax.lax.with_sharding_constraint(q, P(None, "model", None, None))
+            a = multihead_attention(q, k, v, causal=True)
+            a = jax.lax.with_sharding_constraint(a, P(None, "model", None, None))
+        elif window:
+            a = banded_attention(q, k, v, window=window, chunk=cfg.attn_chunk)
+        else:
+            a = multihead_attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
+        a = a.reshape(B, T, -1)
+    with tape.scope("ssm"):
+        s = S.ssm_apply(p["ssm"], tape, xn, cfg)
+    fused = 0.5 * (L.rmsnorm(p["na"], a) + L.rmsnorm(p["ns"], s))
+    x = x + L.linear(tape, "fuse_o", p["fuse_o"], fused)
+    with tape.scope("mlp"):
+        x = x + mlp_apply(p["mlp"], tape, L.rmsnorm(p["ln2"], x), cfg)
+    return x
+
+
+def block_decode(p, tape, x, cache, pos, cfg: ModelConfig, cos, sin, window):
+    B = x.shape[0]
+    xn = L.rmsnorm(p["ln1"], x)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _qkv(p["attn"], tape, xn, cfg, cos, sin, positions)
+    ck, cv = update_cache(cache["k"], cache["v"], k, v, pos)
+    a = decode_attention(q, ck, cv, pos, window=window).reshape(B, 1, -1)
+    s, h = S.ssm_decode(p["ssm"], tape, xn, cache["h"], cfg)
+    fused = 0.5 * (L.rmsnorm(p["na"], a) + L.rmsnorm(p["ns"], s))
+    x = x + L.linear(tape, "fuse_o", p["fuse_o"], fused)
+    x = x + mlp_apply(p["mlp"], tape, L.rmsnorm(p["ln2"], x), cfg)
+    return x, {"k": ck, "v": cv, "h": h.astype(cache["h"].dtype)}
+
+
+class HymbaLM:
+    """Segments: g0 | swa_a (scan) | g_mid | swa_b (scan) | g_last."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        fa = sorted(cfg.full_attn_layers) or [0, cfg.n_layers // 2,
+                                              cfg.n_layers - 1]
+        assert len(fa) == 3 and fa[0] == 0 and fa[2] == cfg.n_layers - 1, fa
+        self.glob = fa
+        self.n_swa_a = fa[1] - 1
+        self.n_swa_b = cfg.n_layers - fa[1] - 2
+
+    def init(self, rng):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.param_dtype)
+        ks = jax.random.split(rng, 8)
+        bi = lambda k: block_init(k, cfg)
+        params = {
+            "embed": L.embedding_init(ks[1], cfg.vocab, cfg.d_model, dt),
+            "g0": bi(ks[0]),
+            "swa_a": jax.vmap(bi)(jax.random.split(ks[4], self.n_swa_a)),
+            "g_mid": bi(ks[5]),
+            "swa_b": jax.vmap(bi)(jax.random.split(ks[6], self.n_swa_b)),
+            "g_last": bi(ks[7]),
+            "final_norm": L.rmsnorm_init(ks[2], cfg.d_model, dt),
+            "head": L.linear_init(ks[3], cfg.d_model, cfg.vocab, dt),
+        }
+        if cfg.meta_tokens:
+            params["meta"] = {"m": L.normal_init(
+                ks[2], (cfg.meta_tokens, cfg.d_model), dt, 0.02)}
+        return params
+
+    def _scan_seg(self, params, tape, x, cos, sin, name):
+        cfg = self.cfg
+        sub = tape.subtaps(name)
+        tapped = sub is not None
+
+        def block(p_l, t_l, xx):
+            return subtape_run(
+                lambda pp, tp: block_apply(pp, tp, xx, cfg, cos, sin,
+                                           cfg.window),
+                p_l, t_l, collect=tape.collect)
+
+        run = jax.checkpoint(block) if cfg.remat else block
+
+        def body(xx, xs):
+            p_l, taps_l = xs
+            out, aux = run(p_l, taps_l if tapped else None, xx)
+            return out, aux
+
+        blocks = fix_scan_params(params[name], tapped)
+        x, (acts, tapz) = jax.lax.scan(body, x,
+                                       (blocks, sub if tapped else {}))
+        tape.merge_stacked(name, acts, tapz)
+        return x
+
+    def _trunk(self, params, tape, x, cos, sin):
+        cfg = self.cfg
+        with tape.scope("g0"):
+            x = block_apply(params["g0"], tape, x, cfg, cos, sin, 0)
+        x = self._scan_seg(params, tape, x, cos, sin, "swa_a")
+        with tape.scope("g_mid"):
+            x = block_apply(params["g_mid"], tape, x, cfg, cos, sin, 0)
+        x = self._scan_seg(params, tape, x, cos, sin, "swa_b")
+        with tape.scope("g_last"):
+            x = block_apply(params["g_last"], tape, x, cfg, cos, sin, 0)
+        return x
+
+    def _embed(self, params, tape, tokens):
+        cfg = self.cfg
+        B = tokens.shape[0]
+        x = L.embedding(tape, "embed", params["embed"], tokens)
+        n_meta = 0
+        if cfg.meta_tokens:
+            meta = params["meta"]["m"]
+            if meta.ndim == 2:
+                meta = jnp.broadcast_to(meta, (B,) + meta.shape)
+            x = jnp.concatenate([meta.astype(x.dtype), x], axis=1)
+            n_meta = cfg.meta_tokens
+        return x, n_meta
+
+    def apply(self, params, batch, tape: Tape):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x, n_meta = self._embed(params, tape, tokens)
+        cos, sin = L.rope_freqs(cfg.hd, x.shape[1], cfg.rope_theta)
+        x = self._trunk(params, tape, x, cos, sin)
+        x = L.rmsnorm(params["final_norm"], x)
+        logits = L.linear(tape, "head", params["head"], x)[:, n_meta:, :]
+        mask = batch.get("mask")
+        mask = mask[:, 1:] if mask is not None else None
+        return L.lm_per_sample_loss(logits[:, :-1], tokens[:, 1:], mask)
+
+    def prefill(self, params, tokens):
+        """Serving prefill -> last-position logits (B,V)."""
+        cfg = self.cfg
+        tape = Tape.null()
+        x, _ = self._embed(params, tape, tokens)
+        cos, sin = L.rope_freqs(cfg.hd, x.shape[1], cfg.rope_theta)
+        x = self._trunk(params, tape, x, cos, sin)
+        x = L.rmsnorm(params["final_norm"], x)
+        return L.linear(tape, "head", params["head"], x[:, -1:, :])[:, 0]
+
+    def init_cache(self, B, Scap, dtype=None):
+        cfg = self.cfg
+        dt = jnp.dtype(dtype or cfg.dtype)
+        K, h = cfg.n_kv_heads, cfg.hd
+
+        def seg(n):
+            lead = (n,) if n is not None else ()
+            return {"k": jnp.zeros(lead + (B, Scap, K, h), dt),
+                    "v": jnp.zeros(lead + (B, Scap, K, h), dt),
+                    "h": jnp.zeros(lead + (B, cfg.ssm_heads, cfg.hd,
+                                           cfg.ssm_state), jnp.float32)}
+
+        return {"g0": seg(None), "swa_a": seg(self.n_swa_a),
+                "g_mid": seg(None), "swa_b": seg(self.n_swa_b),
+                "g_last": seg(None)}
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        tape = Tape.null()
+        Scap = cache["g0"]["k"].shape[1]
+        cos, sin = L.rope_freqs(cfg.hd, Scap, cfg.rope_theta)
+        x = L.embedding(tape, "embed", params["embed"], tokens[:, None])
+        new_cache = {}
+
+        def seg_scan(xx, name):
+            def body(xx, xs):
+                p_l, c_l = xs
+                out, c_l = block_decode(p_l, tape, xx, c_l, pos, cfg, cos,
+                                        sin, cfg.window)
+                return out, c_l
+
+            return jax.lax.scan(body, xx, (params[name], cache[name]))
+
+        x, c = block_decode(params["g0"], tape, x, cache["g0"], pos, cfg,
+                            cos, sin, 0)
+        new_cache["g0"] = c
+        x, new_cache["swa_a"] = seg_scan(x, "swa_a")
+        x, c = block_decode(params["g_mid"], tape, x, cache["g_mid"], pos,
+                            cfg, cos, sin, 0)
+        new_cache["g_mid"] = c
+        x, new_cache["swa_b"] = seg_scan(x, "swa_b")
+        x, c = block_decode(params["g_last"], tape, x, cache["g_last"], pos,
+                            cfg, cos, sin, 0)
+        new_cache["g_last"] = c
+        x = L.rmsnorm(params["final_norm"], x)
+        logits = L.linear(tape, "head", params["head"], x)
+        return logits[:, 0, :], new_cache

@@ -1,0 +1,173 @@
+"""Tap-aware layer library (pure JAX, no flax).
+
+Params are nested dicts. Generalized-linear ops (linear / embedding / moe)
+route through the Tape; every other parameter (bias, norm scale, decay
+vector, ...) may arrive with a leading per-sample batch axis when the DP
+engine is differentiating it — layers align such params with ``align``.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------- init
+def normal_init(rng, shape, dtype, stddev):
+    return (jax.random.normal(rng, shape, jnp.float32) * stddev).astype(dtype)
+
+
+def lecun_init(rng, shape, dtype, fan_in=None):
+    fan_in = fan_in or shape[-2]
+    return normal_init(rng, shape, dtype, 1.0 / math.sqrt(fan_in))
+
+
+def zeros_init(rng, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(rng, shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+# ------------------------------------------------------------ psp alignment
+def align(p: jnp.ndarray, x: jnp.ndarray, feature_ndim: int = 1) -> jnp.ndarray:
+    """Align a vector param to x for broadcasting.
+
+    p is either its declared shape (feature_ndim trailing dims) or that shape
+    with a leading per-sample batch axis (DP psp route). x has batch first.
+    """
+    if p.ndim == feature_ndim:
+        return p
+    # (B, *features) -> (B, 1, ..., 1, *features)
+    ones = (1,) * (x.ndim - 1 - feature_ndim)
+    return p.reshape(p.shape[0], *ones, *p.shape[1:])
+
+
+# -------------------------------------------------------------------- linear
+def linear_init(rng, d_in, d_out, dtype, bias=False, scale=None):
+    p = {"w": normal_init(rng, (d_in, d_out), dtype,
+                          scale if scale is not None else 1.0 / math.sqrt(d_in))}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(tape, name, p, x):
+    """x (B, ..., T, d) @ w (d, p) [+ b]. Tap + record on the matmul output."""
+    s = jnp.einsum("...d,dp->...p", x, p["w"])
+    s = tape.record(name, "mm", s, x)
+    if "b" in p:
+        s = s + align(p["b"], s)
+    return s
+
+
+# ----------------------------------------------------------------- embedding
+def embedding_init(rng, vocab, d, dtype):
+    return {"w": normal_init(rng, (vocab, d), dtype, 1.0)}
+
+
+def embedding(tape, name, p, ids):
+    """ids (B, T) -> (B, T, d); ghost-norm record is the id array."""
+    s = jnp.take(p["w"], ids, axis=0)
+    return tape.record(name, "emb", s, ids)
+
+
+# --------------------------------------------------------------------- norms
+def rmsnorm_init(rng, d, dtype):
+    return {"g": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    nrm = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (nrm * align(p["g"], x).astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(rng, d, dtype):
+    return {"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    nrm = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    out = nrm * align(p["g"], x).astype(jnp.float32) + align(p["b"], x).astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------- convolutions
+def conv2d_init(rng, kh, kw, c_in, c_out, dtype, bias=False):
+    fan_in = kh * kw * c_in
+    p = {"w": normal_init(rng, (kh * kw * c_in, c_out), dtype,
+                          1.0 / math.sqrt(fan_in))}
+    if bias:
+        p["b"] = jnp.zeros((c_out,), dtype)
+    return p
+
+
+def conv2d(tape, name, p, x, kh, kw, stride=1, padding="SAME"):
+    """NHWC conv as an im2col generalized-linear op (paper Sec. 2.1 / Bu et
+    al. 2022a): patches (B, H'*W', kh*kw*C) are the activation record, so
+    the ghost-norm / mixed-ghost machinery applies to convs unchanged —
+    T = H'*W' is exactly the feature dimension of Tables 4/10.
+
+    x (B,H,W,C) -> (B,H',W',c_out)."""
+    B = x.shape[0]
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (kh, kw), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    Ho, Wo = patches.shape[1], patches.shape[2]
+    a = patches.reshape(B, Ho * Wo, -1)          # (B, T, kh*kw*C)
+    s = jnp.einsum("btd,dp->btp", a, p["w"])
+    s = tape.record(name, "mm", s, a)
+    if "b" in p:
+        s = s + align(p["b"], s)
+    return s.reshape(B, Ho, Wo, -1)
+
+
+def conv1d_init(rng, k, c_in, c_out, dtype, bias=False):
+    return conv2d_init(rng, 1, k, c_in, c_out, dtype, bias)
+
+
+def conv1d(tape, name, p, x, k, stride=1, padding="SAME"):
+    """x (B,T,C) -> (B,T',c_out) via the conv2d path."""
+    out = conv2d(tape, name, p, x[:, None], 1, k, stride, padding)
+    return out[:, 0]
+
+
+# ---------------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, max_T: int, theta: float = 10000.0):
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    t = jnp.arange(max_T, dtype=jnp.float32)
+    freqs = jnp.outer(t, inv)  # (T, hd/2)
+    return jnp.cos(freqs), jnp.sin(freqs)
+
+
+def apply_rope(x, cos, sin, positions=None):
+    """x (B, T, H, hd); cos/sin (maxT, hd/2); positions (B, T) optional."""
+    if positions is not None:
+        cos = cos[positions]  # (B,T,hd/2)
+        sin = sin[positions]
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    else:
+        T = x.shape[1]
+        cos, sin = cos[None, :T, None, :], sin[None, :T, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- loss heads
+def lm_per_sample_loss(logits, labels, mask=None):
+    """Mean token cross-entropy per sample. logits (B,T,V), labels (B,T)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold  # (B,T)
+    if mask is None:
+        return jnp.mean(nll, axis=-1)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask, axis=-1) / jnp.maximum(jnp.sum(mask, axis=-1), 1.0)

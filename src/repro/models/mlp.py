@@ -1,0 +1,49 @@
+"""MLP classifier — the paper's Figure 2 / Figure 9 ablation model, and the
+smallest end-to-end exercise of the tap machinery."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+@dataclass(frozen=True)
+class MLPConfig:
+    d_in: int = 32
+    width: int = 64
+    depth: int = 3
+    n_classes: int = 10
+    bias: bool = True
+    dtype: str = "float32"
+
+
+class MLP:
+    def __init__(self, cfg: MLPConfig):
+        self.cfg = cfg
+
+    def init(self, rng):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        keys = jax.random.split(rng, cfg.depth + 1)
+        params = {}
+        d = cfg.d_in
+        for i in range(cfg.depth):
+            params[f"l{i}"] = L.linear_init(keys[i], d, cfg.width, dt, bias=cfg.bias)
+            d = cfg.width
+        params["head"] = L.linear_init(keys[-1], d, cfg.n_classes, dt, bias=cfg.bias)
+        return params
+
+    def apply(self, params, batch, tape):
+        """batch: {'x': (B, d_in), 'y': (B,)} -> per-sample losses (B,)."""
+        x = batch["x"][:, None, :]  # (B, 1, d) — T=1 canonical layout
+        for i in range(self.cfg.depth):
+            x = L.linear(tape, f"l{i}", params[f"l{i}"], x)
+            x = jax.nn.relu(x)
+        logits = L.linear(tape, "head", params["head"], x)[:, 0, :]
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, batch["y"][:, None], axis=-1)[:, 0]
+        return logz - gold

@@ -1,0 +1,112 @@
+"""Mixture-of-Experts with per-(sample, expert) capacity dispatch.
+
+DP correctness note: classic GShard-style dispatch shares expert capacity
+across the whole token batch, which makes one sample's gradient depend on
+*other* samples' routing (capacity overflow drops) — that breaks the
+per-sample sensitivity analysis DP-SGD relies on. Here capacity is allocated
+per (sample, expert): routing, drops and therefore per-sample gradients are
+functions of the sample alone. This also makes the per-(b,e) token groups the
+natural ghost-norm unit (Gram over each sample's routed tokens) — the
+beyond-paper MoE extension of the BK algorithm (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def capacity(cfg: ModelConfig, T: int) -> int:
+    cap = int(math.ceil(cfg.capacity_factor * cfg.top_k * T / cfg.n_experts))
+    return max(1, min(cap, T))
+
+
+def moe_init(rng, cfg: ModelConfig):
+    d, E, ff = cfg.d_model, cfg.n_experts, cfg.moe_d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(rng, 4)
+    mult = 2 if cfg.act == "swiglu" else 1
+    p = {
+        "router": L.linear_init(ks[0], d, E, dt),
+        "experts": {
+            "up": {"w": L.normal_init(ks[1], (E, d, mult * ff), dt,
+                                      1.0 / math.sqrt(d))},
+            "down": {"w": L.normal_init(ks[2], (E, ff, d), dt,
+                                        1.0 / math.sqrt(ff))},
+        },
+    }
+    if cfg.n_shared:
+        from repro.models.transformer import mlp_init  # local to avoid cycle
+        p["shared"] = mlp_init(ks[3], cfg, d_ff=cfg.n_shared * ff)
+    return p
+
+
+def moe_linear(tape, name, p, xg, valid, act_in):
+    """Tapped expert matmul: xg (B,E,C,din) @ w (E,din,dout).
+
+    The tap record keeps (activation, slot-validity mask) — the unit of the
+    per-(sample, expert) ghost norm.
+    """
+    s = jnp.einsum("becd,edf->becf", xg, p["w"])
+    return tape.record(name, "moe", s, {"a": act_in, "mask": valid})
+
+
+def moe_apply(p, tape, x, cfg: ModelConfig):
+    """x (B,T,d) -> (B,T,d)."""
+    B, T, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    cap = capacity(cfg, T)
+
+    logits = L.linear(tape, "router", p["router"], x).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                       # (B,T,E)
+    topv, topi = jax.lax.top_k(probs, k)                          # (B,T,k)
+    if cfg.renorm_topk:
+        topv = topv / jnp.sum(topv, axis=-1, keepdims=True)
+    sel = jnp.sum(jax.nn.one_hot(topi, E, dtype=jnp.float32), axis=2)  # (B,T,E)
+    weight = jnp.einsum("btk,btke->bte", topv,
+                        jax.nn.one_hot(topi, E, dtype=jnp.float32))
+
+    # --- per-(b,e) slot assignment --------------------------------------
+    pos = jnp.cumsum(sel, axis=1) - 1.0                           # (B,T,E)
+    pos = pos.astype(jnp.int32)
+    keep = (sel > 0) & (pos < cap)
+    b_ix = jnp.arange(B)[:, None, None]
+    e_ix = jnp.arange(E)[None, None, :]
+    t_ix = jnp.broadcast_to(jnp.arange(T)[None, :, None], (B, T, E))
+    slot_pos = jnp.where(keep, pos, cap)                          # cap -> dropped
+    slot_t = jnp.zeros((B, E, cap), jnp.int32).at[
+        b_ix, e_ix, slot_pos].set(t_ix, mode="drop")
+    valid = jnp.zeros((B, E, cap), jnp.float32).at[
+        b_ix, e_ix, slot_pos].set(1.0, mode="drop")
+
+    xg = x[jnp.arange(B)[:, None, None], slot_t]                  # (B,E,C,d)
+    xg = xg * valid[..., None].astype(xg.dtype)
+
+    # --- expert FFN (tapped) ---------------------------------------------
+    with tape.scope("experts"):
+        ep = p["experts"]
+        u = moe_linear(tape, "up", ep["up"], xg, valid, xg)
+        if cfg.act == "swiglu":
+            g, u = jnp.split(u, 2, axis=-1)
+            h = jax.nn.silu(g) * u
+        else:
+            h = jax.nn.gelu(u)
+        h = h * valid[..., None].astype(h.dtype)
+        out = moe_linear(tape, "down", ep["down"], h, valid, h)
+        out = out * valid[..., None].astype(out.dtype)
+
+    # --- combine ----------------------------------------------------------
+    g_slot = jnp.clip(pos, 0, cap - 1)                            # (B,T,E)
+    per_e = out[b_ix, e_ix, g_slot]                               # (B,T,E,d)
+    w_eff = (weight * keep.astype(weight.dtype)).astype(per_e.dtype)
+    y = jnp.einsum("bted,bte->btd", per_e, w_eff)
+
+    if cfg.n_shared:
+        from repro.models.transformer import mlp_apply
+        with tape.scope("shared"):
+            y = y + mlp_apply(p["shared"], tape, x, cfg)
+    return y.astype(x.dtype)

@@ -1,0 +1,334 @@
+"""RWKV6 "Finch" (arXiv:2404.05892) — attention-free LM with data-dependent
+per-channel decay. Time-mix recurrence:
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+with w_t = exp(-exp(w0 + tanh(x_w A) B)) (decay LoRA) and dynamic token-shift
+mixing (5-way lerp deltas through a small tanh bottleneck). All projections
+and LoRA matmuls are tapped generalized-linear ops; per-channel vectors
+(maa_*, w0, u, norm scales) take the psp route. Decode is O(1) state.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.tape import Tape, fix_scan_params, subtape_run
+from repro.models import layers as L
+
+TM_DIM = 32       # token-shift bottleneck (TIME_MIX_EXTRA_DIM)
+DECAY_DIM = 64    # decay LoRA rank (TIME_DECAY_EXTRA_DIM)
+HEAD_DIM = 64
+
+
+def _shift(x):
+    """Previous-token shift along T, zeros at t=0."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def wkv6_ref(r, k, v, w, u):
+    """Reference recurrence. r,k,v,w (B,T,H,h); u (H,h) or (B,H,h) -> (B,T,H,h)."""
+    B, T, H, h = r.shape
+    f32 = jnp.float32
+    r, k, v, w = (t.astype(f32) for t in (r, k, v, w))
+    u = u.astype(f32)
+    u_b = u if u.ndim == 3 else jnp.broadcast_to(u, (B, H, h))
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                      # (B,H,h)
+        kv = k_t[..., :, None] * v_t[..., None, :]    # (B,H,h,h)
+        out = (jnp.einsum("bhi,bhij->bhj", r_t, S)
+               + jnp.sum(r_t * u_b * k_t, -1, keepdims=True) * v_t)
+        S = w_t[..., :, None] * S + kv
+        return S, out
+
+    S0 = jnp.zeros((B, H, h, h), f32)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    _, out = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(out, 0, 1)
+
+
+def wkv6_chunked(r, k, v, w, u, chunk: int = 32):
+    """Chunked recurrence (same math as kernels/wkv6): intra-chunk matmul
+    form + inter-chunk state scan. For training/prefill at long T this cuts
+    the backward-saved scan carries from T to T/chunk states."""
+    B, T, H, h = r.shape
+    f32 = jnp.float32
+    pad = (chunk - T % chunk) % chunk
+    if pad:
+        zp = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zp(r), zp(k), zp(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    Tp = r.shape[1]
+    nc = Tp // chunk
+    u_b = u.astype(f32)
+    if u_b.ndim == 2:
+        u_b = jnp.broadcast_to(u_b, (B, H, h))
+    # (nc, B, H, c, h) chunks
+    ch = lambda x: jnp.moveaxis(
+        x.astype(f32).reshape(B, nc, chunk, H, h), (1, 3), (0, 2))
+    rc, kc, vc, wc = ch(r), ch(k), ch(v), ch(w)
+    strict = jnp.tril(jnp.ones((chunk, chunk), f32), -1)
+
+    def step(S, inp):
+        rb, kb, vb, wb = inp                         # (B,H,c,h)
+        logw = jnp.log(jnp.maximum(wb, 1e-30))
+        cum = jnp.cumsum(logw, axis=2)               # inclusive
+        P = jnp.exp(cum)
+        P_prev = jnp.exp(cum - logw)
+        rt = rb * P_prev
+        kt = kb / jnp.maximum(P, 1e-30)
+        A = jnp.einsum("bhik,bhjk->bhij", rt, kt) * strict
+        diag = jnp.einsum("bhik,bhik->bhi", rb * u_b[:, :, None, :], kb)
+        out = (jnp.einsum("bhij,bhjk->bhik", A, vb)
+               + diag[..., None] * vb
+               + jnp.einsum("bhik,bhkj->bhij", rt, S))
+        Pc = P[:, :, -1]                             # (B,H,h)
+        S = (Pc[..., None] * S
+             + jnp.einsum("bhik,bhij->bhkj", kt * Pc[:, :, None, :], vb))
+        return S, out
+
+    S0 = jnp.zeros((B, H, h, h), f32)
+    _, out = jax.lax.scan(step, S0, (rc, kc, vc, wc))
+    out = jnp.moveaxis(out, (0, 2), (1, 3)).reshape(B, Tp, H, h)
+    return out[:, :T]
+
+
+def wkv6_step(S, r, k, v, w, u):
+    """Single decode step. r,k,v,w (B,H,h); S (B,H,h,h)."""
+    f32 = jnp.float32
+    r, k, v, w, S = (t.astype(f32) for t in (r, k, v, w, S))
+    u_b = u.astype(f32)
+    kv = k[..., :, None] * v[..., None, :]
+    out = (jnp.einsum("bhi,bhij->bhj", r, S)
+           + jnp.sum(r * u_b * k, -1, keepdims=True) * v)
+    return w[..., :, None] * S + kv, out
+
+
+# -------------------------------------------------------------------- block
+def block_init(rng, cfg: ModelConfig):
+    d, ff = cfg.d_model, cfg.d_ff
+    H = d // HEAD_DIM
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(rng, 16)
+    lin = lambda i, a, b, s=None: L.linear_init(ks[i], a, b, dt, scale=s)
+    vec = lambda shape, val=0.0: jnp.full(shape, val, dt)
+    att = {
+        "maa_x": vec((d,)), "maa_w": vec((d,)), "maa_k": vec((d,)),
+        "maa_v": vec((d,)), "maa_r": vec((d,)), "maa_g": vec((d,)),
+        "tm_w1": lin(0, d, 5 * TM_DIM, 0.01),
+        **{f"tm_w2_{i}": lin(1 + i, TM_DIM, d, 0.01) for i in range(5)},
+        "w0": vec((d,), -5.0),
+        "wa": lin(6, d, DECAY_DIM, 0.01), "wb": lin(7, DECAY_DIM, d, 0.01),
+        "r": lin(8, d, d), "k": lin(9, d, d), "v": lin(10, d, d),
+        "g": lin(11, d, d), "o": lin(12, d, d),
+        "u": vec((H, HEAD_DIM), 0.5),
+        "lnx_g": jnp.ones((d,), dt), "lnx_b": vec((d,)),
+    }
+    ffn = {
+        "maa_fk": vec((d,)), "maa_fr": vec((d,)),
+        "key": lin(13, d, ff), "value": lin(14, ff, d),
+        "receptance": lin(15, d, d),
+    }
+    return {"ln1": L.layernorm_init(None, d, dt), "att": att,
+            "ln2": L.layernorm_init(None, d, dt), "ffn": ffn}
+
+
+def _group_norm(xf, g, b, H, eps=64e-5):
+    B, T, d = xf.shape
+    xh = xf.reshape(B, T, H, -1).astype(jnp.float32)
+    mu = jnp.mean(xh, -1, keepdims=True)
+    var = jnp.var(xh, -1, keepdims=True)
+    nrm = ((xh - mu) * jax.lax.rsqrt(var + eps)).reshape(B, T, d)
+    return (nrm * L.align(g, nrm).astype(jnp.float32)
+            + L.align(b, nrm).astype(jnp.float32)).astype(xf.dtype)
+
+
+def _mix(xn, sx, maa, delta=None):
+    m = L.align(maa, xn)
+    if delta is not None:
+        m = m + delta
+    return xn + sx * m
+
+
+def _time_mix_inputs(p, tape, xn, sx):
+    """Dynamic 5-way token-shift mixing -> (xw, xk, xv, xr, xg)."""
+    xxx = _mix(xn, sx, p["maa_x"])
+    z = jnp.tanh(L.linear(tape, "tm_w1", p["tm_w1"], xxx))
+    zs = jnp.split(z, 5, axis=-1)
+    deltas = [L.linear(tape, f"tm_w2_{i}", p[f"tm_w2_{i}"], zs[i])
+              for i in range(5)]
+    names = ["maa_w", "maa_k", "maa_v", "maa_r", "maa_g"]
+    return tuple(_mix(xn, sx, p[n], dlt) for n, dlt in zip(names, deltas))
+
+
+def _decay(p, tape, xw):
+    ww = L.linear(tape, "wb", p["wb"],
+                  jnp.tanh(L.linear(tape, "wa", p["wa"], xw)))
+    logw = L.align(p["w0"], ww).astype(jnp.float32) + ww.astype(jnp.float32)
+    return jnp.exp(-jnp.exp(logw))
+
+
+def _att_proj(p, tape, xn, sx):
+    xw, xk, xv, xr, xg = _time_mix_inputs(p, tape, xn, sx)
+    r = L.linear(tape, "r", p["r"], xr)
+    k = L.linear(tape, "k", p["k"], xk)
+    v = L.linear(tape, "v", p["v"], xv)
+    g = jax.nn.silu(L.linear(tape, "g", p["g"], xg))
+    w = _decay(p, tape, xw)
+    return r, k, v, g, w
+
+
+def _heads(t, H):
+    B, T, d = t.shape
+    return t.reshape(B, T, H, HEAD_DIM)
+
+
+def block_apply(p, tape, x, cfg: ModelConfig):
+    d = cfg.d_model
+    H = d // HEAD_DIM
+    # --- time mix ---------------------------------------------------------
+    xn = L.layernorm(p["ln1"], x)
+    sx = _shift(xn) - xn
+    with tape.scope("att"):
+        r, k, v, g, w = _att_proj(p["att"], tape, xn, sx)
+        u = p["att"]["u"]
+        if x.shape[1] >= 2 * cfg.ssm_chunk:
+            wkv = wkv6_chunked(_heads(r, H), _heads(k, H), _heads(v, H),
+                               _heads(w.astype(x.dtype), H), u,
+                               chunk=cfg.ssm_chunk)
+        else:
+            wkv = wkv6_ref(_heads(r, H), _heads(k, H), _heads(v, H),
+                           _heads(w.astype(x.dtype), H), u)
+        out = _group_norm(wkv.reshape(x.shape).astype(x.dtype),
+                          p["att"]["lnx_g"], p["att"]["lnx_b"], H)
+        x = x + L.linear(tape, "o", p["att"]["o"], out * g)
+    # --- channel mix --------------------------------------------------------
+    xn2 = L.layernorm(p["ln2"], x)
+    sx2 = _shift(xn2) - xn2
+    with tape.scope("ffn"):
+        fp = p["ffn"]
+        xk2 = _mix(xn2, sx2, fp["maa_fk"])
+        xr2 = _mix(xn2, sx2, fp["maa_fr"])
+        kk = jnp.square(jax.nn.relu(L.linear(tape, "key", fp["key"], xk2)))
+        rr = jax.nn.sigmoid(L.linear(tape, "receptance", fp["receptance"], xr2))
+        x = x + rr * L.linear(tape, "value", fp["value"], kk)
+    return x
+
+
+def block_decode(p, tape, x, cache, cfg: ModelConfig):
+    """x (B,1,d); cache {'S': (B,H,h,h), 'att_sx': (B,d), 'ffn_sx': (B,d)}."""
+    d = cfg.d_model
+    H = d // HEAD_DIM
+    xn = L.layernorm(p["ln1"], x)
+    sx = cache["att_sx"][:, None, :].astype(xn.dtype) - xn
+    with tape.scope("att"):
+        r, k, v, g, w = _att_proj(p["att"], tape, xn, sx)
+        u = p["att"]["u"]
+        S, out1 = wkv6_step(cache["S"], _heads(r, H)[:, 0], _heads(k, H)[:, 0],
+                            _heads(v, H)[:, 0],
+                            _heads(w.astype(x.dtype), H)[:, 0], u)
+        out = _group_norm(out1[:, None].reshape(x.shape).astype(x.dtype),
+                          p["att"]["lnx_g"], p["att"]["lnx_b"], H)
+        x = x + L.linear(tape, "o", p["att"]["o"], out * g)
+    xn2 = L.layernorm(p["ln2"], x)
+    sx2 = cache["ffn_sx"][:, None, :].astype(xn2.dtype) - xn2
+    with tape.scope("ffn"):
+        fp = p["ffn"]
+        xk2 = _mix(xn2, sx2, fp["maa_fk"])
+        xr2 = _mix(xn2, sx2, fp["maa_fr"])
+        kk = jnp.square(jax.nn.relu(L.linear(tape, "key", fp["key"], xk2)))
+        rr = jax.nn.sigmoid(L.linear(tape, "receptance", fp["receptance"], xr2))
+        x = x + rr * L.linear(tape, "value", fp["value"], kk)
+    new_cache = {"S": S.astype(cache["S"].dtype), "att_sx": xn[:, 0],
+                 "ffn_sx": xn2[:, 0]}
+    return x, new_cache
+
+
+# ----------------------------------------------------------------------- LM
+class Rwkv6LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init(self, rng):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.param_dtype)
+        ks = jax.random.split(rng, 4)
+        blocks = jax.vmap(lambda k: block_init(k, cfg))(
+            jax.random.split(ks[0], cfg.n_layers))
+        return {"embed": L.embedding_init(ks[1], cfg.vocab, cfg.d_model, dt),
+                "ln_in": L.layernorm_init(None, cfg.d_model, dt),
+                "blocks": blocks,
+                "final_norm": L.layernorm_init(None, cfg.d_model, dt),
+                "head": L.linear_init(ks[2], cfg.d_model, cfg.vocab, dt)}
+
+    def _scan_blocks(self, params, tape, x):
+        cfg = self.cfg
+        sub = tape.subtaps("blocks")
+        tapped = sub is not None
+
+        def block(p_l, t_l, xx):
+            return subtape_run(lambda pp, tp: block_apply(pp, tp, xx, cfg),
+                               p_l, t_l, collect=tape.collect)
+
+        run = jax.checkpoint(block) if cfg.remat else block
+
+        def body(xx, xs):
+            p_l, taps_l = xs
+            out, aux = run(p_l, taps_l if tapped else None, xx)
+            return out, aux
+
+        blocks = fix_scan_params(params["blocks"], tapped)
+        x, (acts, tapz) = jax.lax.scan(body, x, (blocks,
+                                                 sub if tapped else {}))
+        tape.merge_stacked("blocks", acts, tapz)
+        return x
+
+    def apply(self, params, batch, tape: Tape):
+        tokens = batch["tokens"]
+        x = L.embedding(tape, "embed", params["embed"], tokens)
+        x = L.layernorm(params["ln_in"], x)
+        x = self._scan_blocks(params, tape, x)
+        x = L.layernorm(params["final_norm"], x)
+        logits = L.linear(tape, "head", params["head"], x)
+        mask = batch.get("mask")
+        mask = mask[:, 1:] if mask is not None else None
+        return L.lm_per_sample_loss(logits[:, :-1], tokens[:, 1:], mask)
+
+    def prefill(self, params, tokens):
+        """Serving prefill -> last-position logits (B,V)."""
+        tape = Tape.null()
+        x = L.embedding(tape, "embed", params["embed"], tokens)
+        x = L.layernorm(params["ln_in"], x)
+        x = self._scan_blocks(params, tape, x)
+        x = L.layernorm(params["final_norm"], x)
+        return L.linear(tape, "head", params["head"], x[:, -1:, :])[:, 0]
+
+    def init_cache(self, B, S=0, dtype=None):
+        cfg = self.cfg
+        dt = jnp.dtype(dtype or cfg.dtype)
+        H = cfg.d_model // HEAD_DIM
+        Lc = cfg.n_layers
+        return {"S": jnp.zeros((Lc, B, H, HEAD_DIM, HEAD_DIM), jnp.float32),
+                "att_sx": jnp.zeros((Lc, B, cfg.d_model), dt),
+                "ffn_sx": jnp.zeros((Lc, B, cfg.d_model), dt)}
+
+    def decode_step(self, params, cache, tokens, pos=None):
+        cfg = self.cfg
+        tape = Tape.null()
+        x = L.embedding(tape, "embed", params["embed"], tokens[:, None])
+        x = L.layernorm(params["ln_in"], x)
+
+        def body(xx, xs):
+            p_l, c_l = xs
+            out, c_l = block_decode(p_l, tape, xx, c_l, cfg)
+            return out, c_l
+
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+        x = L.layernorm(params["final_norm"], x)
+        logits = L.linear(tape, "head", params["head"], x)
+        return logits[:, 0, :], new_cache

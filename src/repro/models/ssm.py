@@ -1,0 +1,83 @@
+"""Mamba2-style selective SSM head (scalar-A-per-head, shared B/C):
+
+    h_t = exp(A dt_t) h_{t-1} + dt_t (x_t ⊗ B_t)     h (heads, hd, N)
+    y_t = h_t C_t + D x_t,   gated by silu(z_t)
+
+Used as the parallel-SSM branch of Hymba blocks. Projections are tapped;
+A_log / D / dt_bias are per-sample (psp) vector params.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def ssm_init(rng, cfg: ModelConfig):
+    d, heads, hd, N = cfg.d_model, cfg.ssm_heads, cfg.hd, cfg.ssm_state
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2 = jax.random.split(rng)
+    return {
+        "xz": L.linear_init(k1, d, 2 * heads * hd, dt),
+        "bcdt": L.linear_init(k2, d, 2 * N + heads, dt),
+        "A_log": jnp.zeros((heads,), dt),
+        "D": jnp.ones((heads,), dt),
+        "dt_bias": jnp.zeros((heads,), dt),
+    }
+
+
+def _inputs(p, tape, xn, cfg: ModelConfig):
+    heads, hd, N = cfg.ssm_heads, cfg.hd, cfg.ssm_state
+    B, T, _ = xn.shape
+    xz = L.linear(tape, "xz", p["xz"], xn)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = xs.reshape(B, T, heads, hd)
+    bcdt = L.linear(tape, "bcdt", p["bcdt"], xn).astype(jnp.float32)
+    B_, C_, dtr = jnp.split(bcdt, [N, 2 * N], axis=-1)
+    dt_bias = L.align(p["dt_bias"], dtr).astype(jnp.float32)
+    dtv = jax.nn.softplus(dtr + dt_bias)                       # (B,T,heads)
+    A = -jnp.exp(L.align(p["A_log"], dtv).astype(jnp.float32))
+    dA = jnp.exp(A * dtv)                                      # (B,T,heads)
+    return xs, z, B_, C_, dtv, dA
+
+
+def ssm_apply(p, tape, xn, cfg: ModelConfig):
+    """xn (B,T,d) -> (B,T,heads*hd)."""
+    heads, hd = cfg.ssm_heads, cfg.hd
+    B, T, _ = xn.shape
+    xs, z, B_, C_, dtv, dA = _inputs(p, tape, xn, cfg)
+    x32 = xs.astype(jnp.float32)
+
+    def step(h, inp):
+        x_t, b_t, c_t, dt_t, da_t = inp
+        h = (da_t[:, :, None, None] * h
+             + dt_t[:, :, None, None] * (x_t[..., None] * b_t[:, None, None, :]))
+        y = jnp.einsum("bhpn,bn->bhp", h, c_t)
+        return h, y
+
+    h0 = jnp.zeros((B, heads, hd, cfg.ssm_state), jnp.float32)
+    xs_t = tuple(jnp.moveaxis(t, 1, 0) for t in (x32, B_, C_, dtv, dA))
+    _, y = jax.lax.scan(step, h0, xs_t)
+    y = jnp.moveaxis(y, 0, 1)                                  # (B,T,heads,hd)
+    D = L.align(p["D"], dtv).astype(jnp.float32)
+    y = y + D[..., None] * x32
+    y = y * jax.nn.silu(z.astype(jnp.float32)).reshape(B, T, heads, hd)
+    return y.reshape(B, T, heads * hd).astype(xn.dtype)
+
+
+def ssm_decode(p, tape, xn, h, cfg: ModelConfig):
+    """xn (B,1,d); h (B,heads,hd,N) -> (y (B,1,heads*hd), h')."""
+    heads, hd = cfg.ssm_heads, cfg.hd
+    B = xn.shape[0]
+    xs, z, B_, C_, dtv, dA = _inputs(p, tape, xn, cfg)
+    x_t = xs.astype(jnp.float32)[:, 0]
+    b_t, c_t, dt_t, da_t = B_[:, 0], C_[:, 0], dtv[:, 0], dA[:, 0]
+    h = (da_t[:, :, None, None] * h.astype(jnp.float32)
+         + dt_t[:, :, None, None] * (x_t[..., None] * b_t[:, None, None, :]))
+    y = jnp.einsum("bhpn,bn->bhp", h, c_t)
+    D = p["D"].astype(jnp.float32)  # decode never runs the psp route
+    y = y + D[..., None] * x_t
+    y = y * jax.nn.silu(z.astype(jnp.float32)).reshape(B, 1, heads, hd)[:, 0]
+    return y.reshape(B, 1, heads * hd).astype(xn.dtype), h

@@ -1,0 +1,298 @@
+"""Dense / MoE decoder-only transformer with GQA, rope, qk-norm, qkv-bias —
+covers llama3 / qwen2 / qwen2.5 / qwen3 / deepseek-moe / moonshot and the
+InternVL backbone. Layers run under lax.scan (stacked params) so the HLO is
+depth-independent; every parametrized op routes through the Tape.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.tape import Tape, fix_scan_params, subtape_run
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models.attention import (decode_attention, multihead_attention,
+                                    update_cache)
+
+NORMS = {"rmsnorm": (L.rmsnorm_init, L.rmsnorm),
+         "layernorm": (L.layernorm_init, L.layernorm)}
+
+
+# ------------------------------------------------------------------ attention
+def attn_init(rng, cfg: ModelConfig):
+    d, H, K, h = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(rng, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {"qkv": L.linear_init(ks[0], d, (H + 2 * K) * h, dt, bias=cfg.qkv_bias),
+         "o": L.linear_init(ks[1], H * h, d, dt)}
+    if cfg.qk_norm:
+        p["qn"] = L.rmsnorm_init(ks[2], h, dt)
+        p["kn"] = L.rmsnorm_init(ks[3], h, dt)
+    return p
+
+
+def _qkv(p, tape, x, cfg, cos, sin, positions=None):
+    B, T = x.shape[0], x.shape[1]
+    H, K, h = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    qkv = L.linear(tape, "qkv", p["qkv"], x)
+    q, k, v = jnp.split(qkv, [H * h, (H + K) * h], axis=-1)
+    q = q.reshape(B, T, H, h)
+    k = k.reshape(B, T, K, h)
+    v = v.reshape(B, T, K, h)
+    if cfg.qk_norm:
+        q = L.rmsnorm(p["qn"], q)
+        k = L.rmsnorm(p["kn"], k)
+    if cos is not None:
+        q = L.apply_rope(q, cos, sin, positions)
+        k = L.apply_rope(k, cos, sin, positions)
+    return q, k, v
+
+
+def attn_apply(p, tape, x, cfg: ModelConfig, cos, sin, *, causal=True, window=0):
+    B, T = x.shape[0], x.shape[1]
+    q, k, v = _qkv(p, tape, x, cfg, cos, sin)
+    if cfg.seq_shard_attn:
+        # context parallelism: when head count doesn't divide the TP axis,
+        # shard the QUERY sequence over 'model' instead (full KV gathered —
+        # KV is small under GQA). Each rank does T/16 queries x all heads:
+        # 1/16th the compute/memory of head-replicated attention.
+        from jax.sharding import PartitionSpec as P
+        q = jax.lax.with_sharding_constraint(q, P(None, "model", None, None))
+        out = multihead_attention(q, k, v, causal=causal, window=window)
+        out = jax.lax.with_sharding_constraint(out, P(None, "model", None, None))
+    else:
+        out = multihead_attention(q, k, v, causal=causal, window=window,
+                                  chunk=cfg.attn_chunk)
+    return L.linear(tape, "o", p["o"], out.reshape(B, T, -1))
+
+
+def attn_decode(p, tape, x, cfg: ModelConfig, cos, sin, cache, pos, window=0):
+    """x (B,1,d); cache {'k','v'} (B,S,K,h); pos scalar. -> out, cache."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _qkv(p, tape, x, cfg, cos, sin, positions)
+    ck, cv = update_cache(cache["k"], cache["v"], k, v, pos)
+    out = decode_attention(q, ck, cv, pos, window=window)
+    out = L.linear(tape, "o", p["o"], out.reshape(B, 1, -1))
+    return out, {"k": ck, "v": cv}
+
+
+# ------------------------------------------------------------------------ mlp
+def mlp_init(rng, cfg: ModelConfig, d_ff=0):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2 = jax.random.split(rng)
+    mult = 2 if cfg.act == "swiglu" else 1
+    return {"up": L.linear_init(k1, d, mult * ff, dt),
+            "down": L.linear_init(k2, ff, d, dt)}
+
+
+def mlp_apply(p, tape, x, cfg: ModelConfig):
+    u = L.linear(tape, "up", p["up"], x)
+    if cfg.act == "swiglu":
+        g, u = jnp.split(u, 2, axis=-1)
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(u)
+    return L.linear(tape, "down", p["down"], h)
+
+
+# --------------------------------------------------------------- dense block
+def dense_block_init(rng, cfg: ModelConfig, use_moe=False):
+    ks = jax.random.split(rng, 4)
+    ninit = NORMS[cfg.norm][0]
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {"ln1": ninit(ks[0], cfg.d_model, dt),
+         "attn": attn_init(ks[1], cfg),
+         "ln2": ninit(ks[2], cfg.d_model, dt)}
+    p["mlp"] = M.moe_init(ks[3], cfg) if use_moe else mlp_init(ks[3], cfg)
+    return p
+
+
+def dense_block_apply(p, tape, x, cfg: ModelConfig, cos, sin, *, causal=True,
+                      window=0, use_moe=False):
+    norm = NORMS[cfg.norm][1]
+    if cfg.seq_parallel:
+        # Megatron-SP: the residual stream stays sequence-sharded over
+        # 'model'; TP matmul outputs reduce-scatter back to it instead of
+        # all-reducing the full activation (halves the dominant wire term)
+        from jax.sharding import PartitionSpec as P
+        x = jax.lax.with_sharding_constraint(x, P(None, "model", None))
+    with tape.scope("attn"):
+        x = x + attn_apply(p["attn"], tape, norm(p["ln1"], x), cfg, cos, sin,
+                           causal=causal, window=window)
+    with tape.scope("mlp"):
+        h = norm(p["ln2"], x)
+        x = x + (M.moe_apply(p["mlp"], tape, h, cfg) if use_moe
+                 else mlp_apply(p["mlp"], tape, h, cfg))
+    if cfg.seq_parallel:
+        from jax.sharding import PartitionSpec as P
+        x = jax.lax.with_sharding_constraint(x, P(None, "model", None))
+    return x
+
+
+def dense_block_decode(p, tape, x, cfg: ModelConfig, cos, sin, cache, pos,
+                       window=0, use_moe=False):
+    norm = NORMS[cfg.norm][1]
+    a, new_cache = attn_decode(p["attn"], tape, norm(p["ln1"], x), cfg, cos,
+                               sin, cache, pos, window)
+    x = x + a
+    h = norm(p["ln2"], x)
+    x = x + (M.moe_apply(p["mlp"], tape, h, cfg) if use_moe
+             else mlp_apply(p["mlp"], tape, h, cfg))
+    return x, new_cache
+
+
+# ------------------------------------------------------------------ LM model
+class TransformerLM:
+    """Decoder-only LM. families: dense, moe, vlm (dense backbone + patch
+    projector)."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.use_moe = cfg.family == "moe"
+
+    # ------------------------------------------------------------------ init
+    def init(self, rng):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.param_dtype)
+        ks = jax.random.split(rng, 8)
+        n_scan = cfg.n_layers - cfg.first_k_dense
+        params = {
+            "embed": L.embedding_init(ks[0], cfg.vocab, cfg.d_model, dt),
+            "final_norm": NORMS[cfg.norm][0](ks[1], cfg.d_model, dt),
+            "head": L.linear_init(ks[2], cfg.d_model, cfg.vocab, dt),
+        }
+        if cfg.first_k_dense:
+            dense_keys = jax.random.split(ks[3], cfg.first_k_dense)
+            for i in range(cfg.first_k_dense):
+                params[f"dense0_{i}"] = dense_block_init(dense_keys[i], cfg,
+                                                         use_moe=False)
+        block_keys = jax.random.split(ks[4], n_scan)
+        params["blocks"] = jax.vmap(
+            lambda k: dense_block_init(k, cfg, use_moe=self.use_moe))(block_keys)
+        if cfg.family == "vlm":
+            params["projector"] = L.linear_init(ks[5], cfg.vit_dim,
+                                                cfg.d_model, dt, bias=True)
+        return params
+
+    # --------------------------------------------------------------- helpers
+    def _rope(self, max_t):
+        return L.rope_freqs(self.cfg.hd, max_t, self.cfg.rope_theta)
+
+    def _scan_blocks(self, params, tape, x, cos, sin, name="blocks",
+                     use_moe=None):
+        cfg = self.cfg
+        use_moe = self.use_moe if use_moe is None else use_moe
+        sub = tape.subtaps(name)
+        tapped = sub is not None
+
+        def block(p_l, t_l, xx):
+            return subtape_run(
+                lambda pp, tp: dense_block_apply(pp, tp, xx, cfg, cos, sin,
+                                                 use_moe=use_moe),
+                p_l, t_l, collect=tape.collect)
+
+        run = jax.checkpoint(block) if cfg.remat else block
+
+        def body(xx, xs):
+            p_l, taps_l = xs
+            out, aux = run(p_l, taps_l if tapped else None, xx)
+            return out, aux
+
+        blocks = fix_scan_params(params[name], tapped)
+        x, (acts, tapz) = jax.lax.scan(body, x, (blocks, sub if tapped else {}))
+        tape.merge_stacked(name, acts, tapz)
+        return x
+
+    def _unscanned_blocks(self, params, tape, x, cos, sin, name, n, use_moe):
+        for i in range(n):
+            with tape.scope(f"{name}_{i}"):
+                x = dense_block_apply(params[f"{name}_{i}"], tape, x, self.cfg,
+                                      cos, sin, use_moe=use_moe)
+        return x
+
+    def _trunk(self, params, tape, x, max_t):
+        cfg = self.cfg
+        cos, sin = self._rope(max_t)
+        if cfg.first_k_dense:
+            x = self._unscanned_blocks(params, tape, x, cos, sin, "dense0",
+                                       cfg.first_k_dense, use_moe=False)
+        x = self._scan_blocks(params, tape, x, cos, sin)
+        return NORMS[cfg.norm][1](params["final_norm"], x)
+
+    # ----------------------------------------------------------------- train
+    def apply(self, params, batch, tape: Tape):
+        """batch {'tokens': (B,T) [, 'patches': (B,Np,vit_dim), 'mask']}
+        -> per-sample losses (B,)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = L.embedding(tape, "embed", params["embed"], tokens)
+        n_prefix = 0
+        if cfg.family == "vlm":
+            pp = L.linear(tape, "projector", params["projector"],
+                          batch["patches"].astype(x.dtype))
+            x = jnp.concatenate([pp, x], axis=1)
+            n_prefix = pp.shape[1]
+        x = self._trunk(params, tape, x, x.shape[1])
+        logits = L.linear(tape, "head", params["head"], x)
+        logits = logits[:, n_prefix:, :]
+        labels = tokens[:, 1:]
+        mask = batch.get("mask")
+        mask = mask[:, 1:] if mask is not None else None
+        return L.lm_per_sample_loss(logits[:, :-1], labels, mask)
+
+    # --------------------------------------------------------------- serving
+    def prefill(self, params, tokens, patches=None):
+        """Serving prefill -> last-position logits (B,V)."""
+        tape = Tape.null()
+        x = L.embedding(tape, "embed", params["embed"], tokens)
+        if patches is not None:
+            pp = L.linear(tape, "projector", params["projector"],
+                          patches.astype(x.dtype))
+            x = jnp.concatenate([pp, x], axis=1)
+        x = self._trunk(params, tape, x, x.shape[1])
+        return L.linear(tape, "head", params["head"], x[:, -1:, :])[:, 0]
+
+    def init_cache(self, B, S, dtype=None):
+        cfg = self.cfg
+        dt = jnp.dtype(dtype or cfg.dtype)
+        K, h, Ltot = cfg.n_kv_heads, cfg.hd, cfg.n_layers
+        kv = lambda n: {"k": jnp.zeros((n, B, S, K, h), dt),
+                        "v": jnp.zeros((n, B, S, K, h), dt)}
+        cache = {"blocks": kv(Ltot - cfg.first_k_dense)}
+        for i in range(cfg.first_k_dense):
+            cache[f"dense0_{i}"] = {"k": jnp.zeros((B, S, K, h), dt),
+                                    "v": jnp.zeros((B, S, K, h), dt)}
+        return cache
+
+    def decode_step(self, params, cache, tokens, pos):
+        """tokens (B,) int32; pos scalar int32 (index being written).
+        -> logits (B,V), new cache."""
+        cfg = self.cfg
+        tape = Tape.null()
+        cos, sin = self._rope(cache["blocks"]["k"].shape[2])
+        x = L.embedding(tape, "embed", params["embed"], tokens[:, None])
+        new_cache = {}
+        for i in range(cfg.first_k_dense):
+            with tape.scope(f"dense0_{i}"):
+                x, c_l = dense_block_decode(params[f"dense0_{i}"], tape, x,
+                                            cfg, cos, sin,
+                                            cache[f"dense0_{i}"], pos,
+                                            use_moe=False)
+            new_cache[f"dense0_{i}"] = c_l
+
+        def body(xx, xs):
+            p_l, c_l = xs
+            out, c_l = dense_block_decode(p_l, tape, xx, cfg, cos, sin, c_l,
+                                          pos, use_moe=self.use_moe)
+            return out, c_l
+
+        x, nc = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
+        new_cache["blocks"] = nc
+        x = NORMS[cfg.norm][1](params["final_norm"], x)
+        logits = L.linear(tape, "head", params["head"], x)
+        return logits[:, 0, :], new_cache

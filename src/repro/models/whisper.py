@@ -1,0 +1,267 @@
+"""Whisper-style encoder-decoder (arXiv:2212.04356).
+
+The conv audio frontend is a STUB per the assignment: ``input_specs`` feeds
+precomputed frame embeddings (B, Tf, frame_dim); a tapped linear projects
+them into the encoder. Encoder = bidirectional pre-LN blocks with sinusoidal
+positions; decoder = causal self-attention + cross-attention with learned
+positional embeddings. LayerNorm + GELU throughout (Whisper convention).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.tape import Tape, fix_scan_params, subtape_run
+from repro.models import layers as L
+from repro.models.attention import (decode_attention, multihead_attention,
+                                    update_cache)
+from repro.models.transformer import attn_init, _qkv, mlp_init, mlp_apply
+
+
+def _sinusoid(T, d):
+    pos = jnp.arange(T, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2.0 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# -------------------------------------------------------------------- blocks
+def enc_block_init(rng, cfg):
+    ks = jax.random.split(rng, 3)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {"ln1": L.layernorm_init(ks[0], cfg.d_model, dt),
+            "attn": attn_init(ks[1], cfg),
+            "ln2": L.layernorm_init(ks[0], cfg.d_model, dt),
+            "mlp": mlp_init(ks[2], cfg)}
+
+
+def enc_block_apply(p, tape, x, cfg):
+    with tape.scope("attn"):
+        xn = L.layernorm(p["ln1"], x)
+        q, k, v = _qkv(p["attn"], tape, xn, cfg, None, None)
+        if cfg.seq_shard_attn:
+            import jax
+            from jax.sharding import PartitionSpec as P
+            q = jax.lax.with_sharding_constraint(q, P(None, "model", None, None))
+            a = multihead_attention(q, k, v, causal=False)
+            a = jax.lax.with_sharding_constraint(a, P(None, "model", None, None))
+        else:
+            a = multihead_attention(q, k, v, causal=False, chunk=cfg.attn_chunk)
+        x = x + L.linear(tape, "o", p["attn"]["o"],
+                         a.reshape(x.shape[0], x.shape[1], -1))
+    with tape.scope("mlp"):
+        x = x + mlp_apply(p["mlp"], tape, L.layernorm(p["ln2"], x), cfg)
+    return x
+
+
+def dec_block_init(rng, cfg):
+    ks = jax.random.split(rng, 5)
+    dt = jnp.dtype(cfg.param_dtype)
+    d, H, h = cfg.d_model, cfg.n_heads, cfg.hd
+    xattn = {"q": L.linear_init(ks[0], d, H * h, dt),
+             "kv": L.linear_init(ks[1], d, 2 * H * h, dt),
+             "o": L.linear_init(ks[2], H * h, d, dt)}
+    return {"ln1": L.layernorm_init(ks[0], d, dt),
+            "attn": attn_init(ks[3], cfg),
+            "lnx": L.layernorm_init(ks[0], d, dt),
+            "xattn": xattn,
+            "ln2": L.layernorm_init(ks[0], d, dt),
+            "mlp": mlp_init(ks[4], cfg)}
+
+
+# ------------------------------------------------------------------------ LM
+class WhisperLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init(self, rng):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.param_dtype)
+        ks = jax.random.split(rng, 8)
+        n_enc = cfg.encoder_layers or cfg.n_layers
+        return {
+            "frontend": L.linear_init(ks[0], cfg.frame_dim or cfg.d_model,
+                                      cfg.d_model, dt, bias=True),
+            "enc_blocks": jax.vmap(lambda k: enc_block_init(k, cfg))(
+                jax.random.split(ks[1], n_enc)),
+            "enc_norm": L.layernorm_init(ks[0], cfg.d_model, dt),
+            "embed": L.embedding_init(ks[2], cfg.vocab, cfg.d_model, dt),
+            "pos": {"e": L.normal_init(ks[3], (cfg.decoder_len, cfg.d_model),
+                                       dt, 0.01)},
+            "dec_blocks": jax.vmap(lambda k: dec_block_init(k, cfg))(
+                jax.random.split(ks[4], cfg.n_layers)),
+            "final_norm": L.layernorm_init(ks[0], cfg.d_model, dt),
+            "head": L.linear_init(ks[5], cfg.d_model, cfg.vocab, dt),
+        }
+
+    # ---------------------------------------------------------------- encode
+    def encode(self, params, tape, frames):
+        cfg = self.cfg
+        x = L.linear(tape, "frontend", params["frontend"],
+                     frames.astype(jnp.dtype(cfg.dtype)))
+        x = x + _sinusoid(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+        sub = tape.subtaps("enc_blocks")
+        tapped = sub is not None
+
+        def body(xx, xs):
+            p_l, taps_l = xs
+            out, aux = subtape_run(
+                lambda pp, tp: enc_block_apply(pp, tp, xx, cfg),
+                p_l, taps_l if tapped else None, collect=tape.collect)
+            return out, aux
+
+        blocks = fix_scan_params(params["enc_blocks"], tapped)
+        x, (acts, tapz) = jax.lax.scan(body, x, (blocks,
+                                                 sub if tapped else {}))
+        tape.merge_stacked("enc_blocks", acts, tapz)
+        return L.layernorm(params["enc_norm"], x)
+
+    # ---------------------------------------------------------------- decode
+    def _dec_embed(self, params, tape, tokens, pos0=0):
+        x = L.embedding(tape, "embed", params["embed"], tokens)
+        pe = params["pos"]["e"]
+        if pe.ndim == 3:  # psp (B, decoder_len, d)
+            pos = jax.lax.dynamic_slice_in_dim(pe, pos0, tokens.shape[1], axis=1)
+        else:
+            pos = jax.lax.dynamic_slice_in_dim(pe, pos0, tokens.shape[1], axis=0)[None]
+        return x + pos.astype(x.dtype)
+
+    def _dec_blocks(self, params, tape, x, enc):
+        cfg = self.cfg
+        H, h = cfg.n_heads, cfg.hd
+        sub = tape.subtaps("dec_blocks")
+        tapped = sub is not None
+
+        def body(xx, xs):
+            p_l, taps_l = xs
+
+            def run(pp, tp):
+                B, Tf = enc.shape[0], enc.shape[1]
+                kv = L.linear(tp, "xattn/kv", pp["xattn"]["kv"], enc)
+                k, v = jnp.split(kv, 2, axis=-1)
+                return dec_block_apply_pre(pp, tp, xx,
+                                           k.reshape(B, Tf, H, h),
+                                           v.reshape(B, Tf, H, h), cfg)
+
+            out, aux = subtape_run(run, p_l, taps_l if tapped else None,
+                                   collect=tape.collect)
+            return out, aux
+
+        blocks = fix_scan_params(params["dec_blocks"], tapped)
+        x, (acts, tapz) = jax.lax.scan(body, x, (blocks,
+                                                 sub if tapped else {}))
+        tape.merge_stacked("dec_blocks", acts, tapz)
+        return x
+
+    # ------------------------------------------------------------------ train
+    def apply(self, params, batch, tape: Tape):
+        """batch {'frames': (B,Tf,frame_dim), 'tokens': (B,Td)} -> (B,)."""
+        cfg = self.cfg
+        enc = self.encode(params, tape, batch["frames"])
+        tokens = batch["tokens"]
+        x = self._dec_embed(params, tape, tokens)
+        x = self._dec_blocks(params, tape, x, enc)
+        x = L.layernorm(params["final_norm"], x)
+        logits = L.linear(tape, "head", params["head"], x)
+        mask = batch.get("mask")
+        mask = mask[:, 1:] if mask is not None else None
+        return L.lm_per_sample_loss(logits[:, :-1], tokens[:, 1:], mask)
+
+    # ---------------------------------------------------------------- serving
+    def prefill(self, params, frames, tokens):
+        """Encode frames + full decoder -> last-position logits (B,V)."""
+        tape = Tape.null()
+        enc = self.encode(params, tape, frames)
+        x = self._dec_embed(params, tape, tokens)
+        x = self._dec_blocks(params, tape, x, enc)
+        x = L.layernorm(params["final_norm"], x)
+        return L.linear(tape, "head", params["head"], x[:, -1:, :])[:, 0]
+
+    def init_cache(self, B, S, Tf=0, dtype=None):
+        cfg = self.cfg
+        dt = jnp.dtype(dtype or cfg.dtype)
+        Lc, H, h = cfg.n_layers, cfg.n_heads, cfg.hd
+        Tf = Tf or S
+        return {"k": jnp.zeros((Lc, B, cfg.decoder_len, H, h), dt),
+                "v": jnp.zeros((Lc, B, cfg.decoder_len, H, h), dt),
+                "xk": jnp.zeros((Lc, B, Tf, H, h), dt),
+                "xv": jnp.zeros((Lc, B, Tf, H, h), dt)}
+
+    def prefill_cross(self, params, frames, cache):
+        """Encode audio once; fill the cross-attention KV cache."""
+        cfg = self.cfg
+        tape = Tape.null()
+        enc = self.encode(params, tape, frames)
+        B, Tf = enc.shape[0], enc.shape[1]
+        H, h = cfg.n_heads, cfg.hd
+
+        def body(_, p_l):
+            kv = L.linear(tape, "xattn/kv", p_l["xattn"]["kv"], enc)
+            k, v = jnp.split(kv, 2, axis=-1)
+            return _, (k.reshape(B, Tf, H, h), v.reshape(B, Tf, H, h))
+
+        _, (xk, xv) = jax.lax.scan(body, None, params["dec_blocks"])
+        return dict(cache, xk=xk.astype(cache["xk"].dtype),
+                    xv=xv.astype(cache["xv"].dtype))
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        tape = Tape.null()
+        x = self._dec_embed(params, tape, tokens[:, None], pos0=pos)
+
+        def body(xx, xs):
+            p_l, ck, cv, xk, xv = xs
+            with tape.scope("self"):
+                xn = L.layernorm(p_l["ln1"], xx)
+                q, k, v = _qkv(p_l["attn"], tape, xn, cfg, None, None)
+                ck, cv = update_cache(ck, cv, k, v, pos)
+                a = decode_attention(q, ck, cv, pos)
+                xx = xx + L.linear(tape, "o", p_l["attn"]["o"],
+                                   a.reshape(a.shape[0], 1, -1))
+            with tape.scope("cross"):
+                xx = xx + cross_attn_decode(p_l["xattn"], tape,
+                                            L.layernorm(p_l["lnx"], xx),
+                                            xk, xv, cfg)
+            with tape.scope("mlp"):
+                xx = xx + mlp_apply(p_l["mlp"], tape,
+                                    L.layernorm(p_l["ln2"], xx), cfg)
+            return xx, (ck, cv)
+
+        x, (nk, nv) = jax.lax.scan(body, x, (params["dec_blocks"], cache["k"],
+                                             cache["v"], cache["xk"],
+                                             cache["xv"]))
+        x = L.layernorm(params["final_norm"], x)
+        logits = L.linear(tape, "head", params["head"], x)
+        return logits[:, 0, :], dict(cache, k=nk, v=nv)
+
+
+def dec_block_apply_pre(p, tape, x, enc_k, enc_v, cfg):
+    """Decoder block with precomputed cross K/V (used under scan where the
+    per-layer cross projections are computed inside the body)."""
+    with tape.scope("attn"):
+        xn = L.layernorm(p["ln1"], x)
+        q, k, v = _qkv(p["attn"], tape, xn, cfg, None, None)
+        a = multihead_attention(q, k, v, causal=True)
+        x = x + L.linear(tape, "o", p["attn"]["o"],
+                         a.reshape(x.shape[0], x.shape[1], -1))
+    with tape.scope("xattn"):
+        xn = L.layernorm(p["lnx"], x)
+        B, Td = xn.shape[0], xn.shape[1]
+        H, h = cfg.n_heads, cfg.hd
+        q = L.linear(tape, "q", p["xattn"]["q"], xn).reshape(B, Td, H, h)
+        out = multihead_attention(q, enc_k, enc_v, causal=False)
+        x = x + L.linear(tape, "o", p["xattn"]["o"], out.reshape(B, Td, -1))
+    with tape.scope("mlp"):
+        x = x + mlp_apply(p["mlp"], tape, L.layernorm(p["ln2"], x), cfg)
+    return x
+
+
+def cross_attn_decode(p, tape, x, enc_k, enc_v, cfg):
+    B = x.shape[0]
+    H, h = cfg.n_heads, cfg.hd
+    q = L.linear(tape, "q", p["q"], x).reshape(B, 1, H, h)
+    out = multihead_attention(q, enc_k, enc_v, causal=False)
+    return L.linear(tape, "o", p["o"], out.reshape(B, 1, -1))

@@ -1,0 +1,91 @@
+"""Gradient accumulation with DP semantics (paper footnote 2): the LOGICAL
+batch determines accuracy and privacy accounting; the PHYSICAL (micro) batch
+only determines memory. Per-sample clipping happens inside each microbatch;
+the clipped sums accumulate across microbatches in a lax.scan; Gaussian noise
+is added ONCE per logical batch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bk import DPConfig, bk_clipped_sum
+from repro.core.noise import add_noise
+from repro.utils.tree import unflatten
+
+
+def accumulated_baseline_grad(apply_fn, params, batch, rng, cfg: DPConfig,
+                              microbatch: int):
+    """Microbatched accumulation for the non-BK modes (nonprivate /
+    ghostclip / opacus / ...): per-microbatch grads are re-scaled to sums,
+    accumulated under lax.scan, then noised once (DP modes)."""
+    import dataclasses
+
+    from repro.core.engine import make_grad_fn
+    from repro.utils.tree import flatten
+
+    B = jax.tree_util.tree_leaves(batch)[0].shape[0]
+    mb_cfg = (cfg if cfg.mode == "nonprivate"
+              else dataclasses.replace(cfg, sigma=0.0))
+    grad_fn = make_grad_fn(apply_fn, mb_cfg)
+    if microbatch <= 0 or microbatch >= B:
+        return grad_fn(params, batch, rng)
+    assert B % microbatch == 0, (B, microbatch)
+    M = B // microbatch
+    mb_batch = jax.tree_util.tree_map(
+        lambda x: x.reshape((M, microbatch) + x.shape[1:]), batch)
+    g0 = jax.eval_shape(
+        lambda p, b: grad_fn(p, b, rng)[0], params,
+        jax.tree_util.tree_map(lambda x: jax.ShapeDtypeStruct(x.shape[1:],
+                                                              x.dtype),
+                               mb_batch))
+    zeros = jax.tree_util.tree_map(lambda v: jnp.zeros(v.shape, v.dtype), g0)
+
+    def body(acc, mb):
+        g, aux = grad_fn(params, mb, rng)
+        acc = jax.tree_util.tree_map(
+            lambda a, x: a + x.astype(a.dtype) * float(microbatch), acc, g)
+        return acc, aux["loss"]
+
+    sums, losses = jax.lax.scan(body, zeros, mb_batch)
+    if cfg.mode == "nonprivate":
+        grads = jax.tree_util.tree_map(lambda s: s / float(B), sums)
+    else:
+        flat = add_noise(flatten(sums), rng, cfg.sigma, cfg.R, float(B))
+        grads = unflatten(flat)
+    return grads, {"loss": jnp.mean(losses)}
+
+
+def accumulated_private_grad(apply_fn, params, batch, rng, cfg: DPConfig,
+                             microbatch: int):
+    """batch leaves (B_logical, ...); microbatch must divide B_logical.
+    Returns (grads, aux) identical in distribution to the full-batch BK call."""
+    from repro.core.bk import BK_MODES
+
+    if cfg.mode not in BK_MODES:
+        return accumulated_baseline_grad(apply_fn, params, batch, rng, cfg,
+                                         microbatch)
+    B = jax.tree_util.tree_leaves(batch)[0].shape[0]
+    if microbatch <= 0 or microbatch >= B:
+        from repro.core.bk import bk_private_grad
+        return bk_private_grad(apply_fn, params, batch, rng, cfg)
+    assert B % microbatch == 0, (B, microbatch)
+    M = B // microbatch
+    mb_batch = jax.tree_util.tree_map(
+        lambda x: x.reshape((M, microbatch) + x.shape[1:]), batch)
+
+    sums0, aux0 = jax.eval_shape(
+        lambda p, b: bk_clipped_sum(apply_fn, p, b, cfg), params,
+        jax.tree_util.tree_map(lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+                               mb_batch))
+    zeros = {k: jnp.zeros(v.shape, v.dtype) for k, v in sums0.items()}
+
+    def body(acc, mb):
+        s, aux = bk_clipped_sum(apply_fn, params, mb, cfg)
+        acc = {k: acc[k] + s[k] for k in acc}
+        return acc, (aux["loss"], aux["per_sample_norms"])
+
+    sums, (losses, norms) = jax.lax.scan(body, zeros, mb_batch)
+    flat = add_noise(sums, rng, cfg.sigma, cfg.R, float(B))
+    aux = {"loss": jnp.mean(losses),
+           "per_sample_norms": norms.reshape(-1)}
+    return unflatten(flat), aux

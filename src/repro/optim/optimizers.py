@@ -1,0 +1,168 @@
+"""Pure-JAX optimizers (no optax in this environment): SGD(m), Adam(W),
+LAMB, Adafactor. Functional API:
+
+    opt = make_optimizer("adamw", lr=..., weight_decay=...)
+    state = opt.init(params)
+    params, state = opt.update(grads, state, params, step)
+
+States are pytrees mirroring params (sharding follows params under pjit).
+Adafactor keeps factored second moments — the memory-frugal choice for the
+405B configs (optimizer state bytes dominate HBM there; see EXPERIMENTS).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params, step) -> (new_params, new_state)
+
+
+def _tmap(fn, *trees):
+    return jax.tree_util.tree_map(fn, *trees)
+
+
+# ---------------------------------------------------------------------- sgd
+def sgd(lr_fn, momentum: float = 0.9, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"m": _tmap(lambda p: jnp.zeros_like(p, F32), params)}
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+        m = _tmap(lambda m_, g: momentum * m_ + g.astype(F32), state["m"], grads)
+        new_p = _tmap(lambda p, m_: (p.astype(F32) - lr * (m_ + weight_decay
+                      * p.astype(F32))).astype(p.dtype), params, m)
+        return new_p, {"m": m}
+
+    return Optimizer(init, update)
+
+
+# --------------------------------------------------------------------- adam
+def adamw(lr_fn, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, F32)
+        return {"m": _tmap(z, params), "v": _tmap(z, params)}
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+        t = step.astype(F32) + 1.0
+        m = _tmap(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(F32),
+                  state["m"], grads)
+        v = _tmap(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(F32)),
+                  state["v"], grads)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(p, m_, v_):
+            step_ = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            return (p.astype(F32) - lr * (step_ + weight_decay * p.astype(F32))
+                    ).astype(p.dtype)
+
+        return _tmap(upd, params, m, v), {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+# --------------------------------------------------------------------- lamb
+def lamb(lr_fn, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-6,
+         weight_decay: float = 0.01) -> Optimizer:
+    base = adamw(lambda s: 1.0, b1, b2, eps, 0.0)
+
+    def init(params):
+        return base.init(params)
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+        t = step.astype(F32) + 1.0
+        m = _tmap(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(F32),
+                  state["m"], grads)
+        v = _tmap(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(F32)),
+                  state["v"], grads)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(p, m_, v_):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps) + weight_decay * p.astype(F32)
+            pn = jnp.sqrt(jnp.sum(jnp.square(p.astype(F32))))
+            un = jnp.sqrt(jnp.sum(jnp.square(u)))
+            trust = jnp.where((pn > 0) & (un > 0), pn / un, 1.0)
+            return (p.astype(F32) - lr * trust * u).astype(p.dtype)
+
+        return _tmap(upd, params, m, v), {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------- adafactor
+def adafactor(lr_fn, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0, weight_decay: float = 0.0) -> Optimizer:
+    """Factored second moments for >=2D params: O(d+p) state instead of O(dp)."""
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def z(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], F32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], F32)}
+            return {"v": jnp.zeros_like(p, F32)}
+
+        return {"s": _tmap(z, params)}
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+        t = step.astype(F32) + 1.0
+        beta = 1.0 - jnp.power(t, -decay)
+
+        def upd(p, g, s):
+            g = g.astype(F32)
+            g2 = jnp.square(g) + eps
+            if _factored(p):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = (vr[..., None] / jnp.mean(vr, axis=-1, keepdims=True)[..., None]
+                         ) * vc[..., None, :]
+                u = g * jax.lax.rsqrt(denom + eps)
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                ns = {"v": v}
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)))
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            newp = (p.astype(F32) - lr * (u + weight_decay * p.astype(F32))
+                    ).astype(p.dtype)
+            return newp, ns
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree_util.tree_leaves(grads)
+        flat_s = tdef.flatten_up_to(state["s"])
+        outs = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
+        new_s = jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs])
+        return new_p, {"s": new_s}
+
+    return Optimizer(init, update)
+
+
+# ----------------------------------------------------------------- registry
+def make_optimizer(name: str, lr_fn, weight_decay: float = 0.0) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr_fn, weight_decay=weight_decay)
+    if name == "adamw":
+        return adamw(lr_fn, weight_decay=weight_decay)
+    if name == "lamb":
+        return lamb(lr_fn, weight_decay=weight_decay)
+    if name == "adafactor":
+        return adafactor(lr_fn, weight_decay=weight_decay)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,42 @@
+"""LR schedules as step -> lr functions (jit-traceable)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(lr: float, warmup: int, total: int, final_frac: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        w = jnp.maximum(1.0, float(warmup))
+        warm = lr * jnp.minimum(1.0, (s + 1.0) / w)
+        prog = jnp.clip((s - warmup) / jnp.maximum(1.0, total - warmup), 0.0, 1.0)
+        cos = lr * (final_frac + (1 - final_frac) * 0.5 *
+                    (1.0 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(s < warmup, warm, cos)
+
+    return fn
+
+
+def warmup_linear(lr: float, warmup: int, total: int):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = lr * jnp.minimum(1.0, (s + 1.0) / jnp.maximum(1.0, float(warmup)))
+        decay = lr * jnp.clip(1.0 - (s - warmup) / jnp.maximum(1.0, total - warmup),
+                              0.0, 1.0)
+        return jnp.where(s < warmup, warm, decay)
+
+    return fn
+
+
+def make_schedule(name: str, lr: float, warmup: int = 0, total: int = 1):
+    if name == "constant" or warmup == 0 and name == "":
+        return constant(lr)
+    if name == "cosine":
+        return warmup_cosine(lr, warmup, total)
+    if name == "linear":
+        return warmup_linear(lr, warmup, total)
+    return constant(lr)

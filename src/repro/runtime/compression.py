@@ -1,0 +1,54 @@
+"""Gradient compression for the slow cross-pod (DCN) axis.
+
+8-bit stochastic-rounding quantization with per-tensor scale. The cross-pod
+gradient reduction is implemented as all_gather(int8 + scale) + local
+dequant-sum instead of a bf16 all-reduce: wire bytes per pod go from
+2*|G|*2 (all-reduce bf16, bidirectional) to n_pods*|G| (gathered int8) —
+a 4x reduction at n_pods=2. XLA collectives are dtype-preserving, so this is
+expressible today without custom DCN collectives.
+
+DP note: quantization is applied AFTER per-sample clipping + noise, so the
+privacy guarantee is untouched (post-processing invariance of DP); stochastic
+rounding keeps the gradient unbiased.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(x, rng):
+    """-> (int8 values, f32 scale). Stochastic rounding (unbiased)."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+    y = x32 / scale
+    lo = jnp.floor(y)
+    frac = y - lo
+    up = jax.random.uniform(rng, x.shape) < frac
+    q = jnp.clip(lo + up.astype(jnp.float32), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q, scale, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compressed_allreduce_mean(x, rng, axis_name: str):
+    """Mean over `axis_name` via quantized all_gather + local dequant-sum.
+
+    Call inside shard_map/pjit with `axis_name` bound to the pod axis."""
+    q, scale = quantize(x, rng)
+    qg = jax.lax.all_gather(q, axis_name)            # (n, ...) int8 on wire
+    sg = jax.lax.all_gather(scale, axis_name)        # (n,) f32
+    n = qg.shape[0]
+    summed = jnp.tensordot(sg.astype(jnp.float32),
+                           qg.astype(jnp.float32), axes=1)
+    return (summed / n).astype(x.dtype)
+
+
+def compressed_tree_allreduce_mean(tree, rng, axis_name: str):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    rngs = jax.random.split(rng, len(leaves))
+    out = [compressed_allreduce_mean(x, r, axis_name)
+           for x, r in zip(leaves, rngs)]
+    return jax.tree_util.tree_unflatten(treedef, out)

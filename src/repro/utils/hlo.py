@@ -1,0 +1,293 @@
+"""Trip-aware analysis of optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop (lax.scan) bodies ONCE,
+which silently undercounts layer-scanned / microbatch-accumulated programs
+by orders of magnitude. This module parses the optimized HLO, recovers the
+while-loop trip counts from their condition computations, and aggregates
+
+  * matmul FLOPs (dot ops, including inside fusions),
+  * HBM traffic proxy (operand + result bytes of every top-level op),
+  * collective wire bytes per op type,
+
+each multiplied by the product of enclosing loop trip counts. These feed the
+roofline terms in EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-_]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\s*\{\s*"n"\s*:\s*"(\d+)"')
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-_]+)\s*=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\](?:{[^}]*})?))\s*"
+    r"([\w\-]+)\((.*)$")
+_CALLED_RE = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w.\-_]+)")
+_OPERAND_RE = re.compile(r"%([\w.\-_]+)")
+
+
+def _shape_dims(txt):
+    out = []
+    for dt, dims in _SHAPE_RE.findall(txt):
+        if dt not in _DTYPE_BYTES:
+            continue
+        d = [int(x) for x in dims.split(",") if x]
+        out.append((dt, d))
+    return out
+
+
+def _shape_bytes(txt) -> int:
+    total = 0
+    for dt, dims in _shape_dims(txt):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class _Op:
+    name: str
+    result: str
+    opcode: str
+    rest: str
+    operands: list = field(default_factory=list)
+
+
+@dataclass
+class _Comp:
+    name: str
+    ops: list = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)  # value name -> result txt
+
+
+def _parse(hlo: str):
+    comps = {}
+    cur = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                cur = _Comp(m.group(1))
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, result, opcode, rest = m.groups()
+        args = rest.split(")", 1)[0]
+        op = _Op(name, result, opcode, rest,
+                 operands=_OPERAND_RE.findall(args))
+        cur.shapes[name] = result
+        cur.ops.append(op)
+    return comps
+
+
+def _dot_flops(op: _Op, comp: _Comp) -> float:
+    """2 * prod(result dims) * contraction size (first contracting dim set)."""
+    shapes = _shape_dims(op.result)
+    if not shapes:
+        return 0.0
+    _, rdims = shapes[0]
+    n_out = 1
+    for d in rdims:
+        n_out *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    k = 1
+    if m and op.operands:
+        lhs_shape = comp.shapes.get(op.operands[0], "")
+        ls = _shape_dims(lhs_shape)
+        if ls:
+            dims = ls[0][1]
+            for ix in m.group(1).split(","):
+                if ix and int(ix) < len(dims):
+                    k *= dims[int(ix)]
+    return 2.0 * n_out * k
+
+
+def _trip_count(cond: _Comp) -> int:
+    best = 1
+    for op in cond.ops:
+        if op.opcode == "constant":
+            m = re.search(r"constant\((\d+)\)", "constant(" + op.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+class HloAnalysis:
+    def __init__(self, hlo_text: str):
+        self.comps = _parse(hlo_text)
+        self.entry = self._find_entry(hlo_text)
+        self._memo = {}
+
+    def _find_entry(self, hlo: str):
+        m = re.search(r"ENTRY\s+%?([\w.\-_]+)", hlo)
+        return m.group(1) if m else next(iter(self.comps), None)
+
+    def _cost(self, cname: str):
+        """-> (flops, traffic_bytes, {collective: bytes}) for one execution."""
+        if cname in self._memo:
+            return self._memo[cname]
+        comp = self.comps.get(cname)
+        if comp is None:
+            return 0.0, 0.0, {}
+        flops = 0.0
+        traffic = 0.0
+        coll = defaultdict(float)
+        self._memo[cname] = (0.0, 0.0, {})  # cycle guard
+        for op in comp.ops:
+            called = _CALLED_RE.findall(op.rest)
+            if op.opcode == "while":
+                body, cond = None, None
+                mb = re.search(r"body=%?([\w.\-_]+)", op.rest)
+                mc = re.search(r"condition=%?([\w.\-_]+)", op.rest)
+                if mb:
+                    body = mb.group(1)
+                if mc:
+                    cond = mc.group(1)
+                mt = _TRIP_RE.search(op.rest)
+                if mt:  # XLA records the static trip count directly
+                    trips = int(mt.group(1))
+                else:
+                    trips = _trip_count(self.comps[cond]) if cond in self.comps else 1
+                bf, bt, bc = self._cost(body) if body else (0, 0, {})
+                flops += trips * bf
+                traffic += trips * bt
+                for k, v in bc.items():
+                    coll[k] += trips * v
+                continue
+            if op.opcode in ("fusion", "call", "conditional", "map",
+                             "reduce", "reduce-window", "sort", "scatter",
+                             "select-and-scatter", "custom-call"):
+                for sub in called:
+                    sf, st, sc = self._cost(sub)
+                    flops += sf
+                    # interior of a fusion is one kernel: no extra traffic
+                    if op.opcode in ("call", "conditional"):
+                        traffic += st
+                    for k, v in sc.items():
+                        coll[k] += v
+            if op.opcode == "dot":
+                flops += _dot_flops(op, comp)
+            base = op.opcode.replace("-start", "")
+            if base in COLLECTIVES and not op.opcode.endswith("-done"):
+                coll[base] += _shape_bytes(op.result)
+            traffic += self._op_traffic(op, comp)
+        out = (flops, traffic, dict(coll))
+        self._memo[cname] = out
+        return out
+
+    # ------------------------------------------------------------ traffic
+    # Perfect-fusion HBM model (TPU roofline convention): charge the ops
+    # whose inputs/outputs MUST round-trip HBM — matmuls, windowed reads,
+    # in-place updates, reductions, collectives — and assume elementwise /
+    # copy / convert work fuses into its producers (true on TPU; the CPU
+    # backend's materialized f32 legalization copies are ignored).
+    _WINDOW_OPS = ("dynamic-slice", "slice", "gather")
+
+    def _op_traffic(self, op: _Op, comp: _Comp) -> float:
+        oc = op.opcode
+        res = _shape_bytes(op.result)
+        if oc in self._WINDOW_OPS:
+            return 2.0 * res
+        if oc == "dynamic-update-slice":
+            upd = _shape_bytes(comp.shapes.get(op.operands[1], "")) if \
+                len(op.operands) > 1 else res
+            return 2.0 * upd
+        if oc == "scatter":
+            upd = _shape_bytes(comp.shapes.get(op.operands[2], "")) if \
+                len(op.operands) > 2 else res
+            return 2.0 * upd
+        if oc == "dot":
+            total = float(res)
+            for o in op.operands:
+                total += _shape_bytes(comp.shapes.get(o, ""))
+            return total
+        if oc == "reduce" or oc.startswith("all-"):
+            total = float(res)
+            for o in op.operands:
+                total += _shape_bytes(comp.shapes.get(o, ""))
+            return total
+        if oc == "fusion":
+            m = re.search(r"calls=%?([\w.\-_]+)", op.rest)
+            sub = self.comps.get(m.group(1)) if m else None
+            if sub is None:
+                return 0.0
+            interior = {o.opcode for o in sub.ops}
+            total = 0.0
+            if "dynamic-update-slice" in interior:
+                for o in sub.ops:
+                    if o.opcode == "dynamic-update-slice" and len(o.operands) > 1:
+                        total += 2.0 * _shape_bytes(sub.shapes.get(o.operands[1], ""))
+            for o in sub.ops:
+                if o.opcode in self._WINDOW_OPS:
+                    total += 2.0 * _shape_bytes(o.result)
+                elif o.opcode in ("dot", "reduce"):
+                    total += _shape_bytes(o.result)
+                    for od in o.operands:
+                        total += _shape_bytes(sub.shapes.get(od, ""))
+            # reduction-style fusion with big inputs, small output (e.g. the
+            # norm-phase sum-of-squares): charge the streamed input once
+            if total == 0.0 and "reduce" not in interior:
+                big_in = sum(_shape_bytes(comp.shapes.get(o, ""))
+                             for o in op.operands)
+                if big_in > 4 * res:
+                    total = float(res) + big_in
+            return total
+        return 0.0
+
+    def _param_window_bytes(self, sub: _Comp, index: int):
+        """If fusion parameter `index` is consumed only by window/update ops,
+        return the touched bytes; else None."""
+        pname = None
+        for o in sub.ops:
+            if o.opcode == "parameter" and f"parameter({index})" in o.rest:
+                pname = o.name
+                break
+        if pname is None:
+            return None
+        touched = 0.0
+        for o in sub.ops:
+            if pname not in o.operands:
+                continue
+            if o.opcode in self._WINDOW_OPS:
+                touched += _shape_bytes(o.result)
+            elif o.opcode == "dynamic-update-slice" and o.operands and \
+                    o.operands[0] == pname:
+                upd = _shape_bytes(sub.shapes.get(o.operands[1], ""))
+                touched += upd
+            else:
+                return None
+        return touched if touched else None
+
+    def totals(self):
+        flops, traffic, coll = self._cost(self.entry)
+        coll = dict(coll)
+        coll["total"] = sum(coll.values())
+        return {"flops": flops, "traffic_bytes": traffic,
+                "collectives": coll}
+
+
+def analyze_hlo(hlo_text: str) -> dict:
+    return HloAnalysis(hlo_text).totals()
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Trip-aware collective buffer bytes per op type (+ 'total')."""
+    return analyze_hlo(hlo_text)["collectives"]

@@ -1,0 +1,71 @@
+"""Pytree path utilities.
+
+Params are nested dicts of jnp arrays. Paths are '/'-joined key strings,
+e.g. ``blocks/attn/qkv/w``. The DP engine partitions parameter leaves into
+"ghost" weights (owned by a tapped generalized-linear op; path is
+``<tap key>/w``) and "per-sample" (psp) leaves (biases, norm scales, decay
+vectors, ...) which are broadcast to a leading batch dim before
+differentiation so their cotangents are per-sample gradients.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flatten(tree: dict, prefix: str = "") -> dict:
+    """Nested dict -> flat {path: leaf}."""
+    out = {}
+    for k, v in tree.items():
+        path = f"{prefix}/{k}" if prefix else k
+        if isinstance(v, dict):
+            out.update(flatten(v, path))
+        else:
+            out[path] = v
+    return out
+
+
+def unflatten(flat: dict) -> dict:
+    out: dict = {}
+    for path, leaf in flat.items():
+        keys = path.split("/")
+        node = out
+        for k in keys[:-1]:
+            node = node.setdefault(k, {})
+        node[keys[-1]] = leaf
+    return out
+
+
+def tree_size(tree) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_zeros_like(tree):
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def tree_map_with_path(fn, tree: dict, prefix: str = "") -> dict:
+    """Map fn(path, leaf) over a nested dict, preserving structure."""
+    out = {}
+    for k, v in tree.items():
+        path = f"{prefix}/{k}" if prefix else k
+        if isinstance(v, dict):
+            out[path.split("/")[-1]] = tree_map_with_path(fn, v, path)
+        else:
+            out[path.split("/")[-1]] = fn(path, v)
+    return out
+
+
+def merge_flat(base_flat: dict, override_flat: dict) -> dict:
+    merged = dict(base_flat)
+    merged.update(override_flat)
+    return merged

@@ -1,0 +1,50 @@
+"""Privacy accounting: RDP of the Sampled Gaussian Mechanism."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.accounting import (_log_a_frac, _log_a_int, budget_for,
+                                   calibrate_sigma, compute_epsilon, rdp_sgm)
+
+
+@pytest.mark.parametrize("q,sigma,alpha", [(0.01, 1.0, 4), (0.1, 2.0, 8),
+                                           (0.004, 0.8, 16), (0.5, 1.5, 3)])
+def test_int_alpha_matches_quadrature(q, sigma, alpha):
+    """The integer-alpha binomial formula vs direct numerical integration."""
+    np.testing.assert_allclose(_log_a_int(q, sigma, alpha),
+                               _log_a_frac(q, sigma, float(alpha)),
+                               rtol=1e-6, atol=1e-8)
+
+
+def test_q1_matches_gaussian_closed_form():
+    # non-subsampled Gaussian: RDP(alpha) = alpha / (2 sigma^2)
+    for alpha in [2.0, 4.0, 16.0]:
+        np.testing.assert_allclose(rdp_sgm(1.0, 2.0, alpha),
+                                   alpha / (2 * 4.0), rtol=1e-9)
+
+
+def test_subsampling_amplifies_privacy():
+    assert rdp_sgm(0.01, 1.0, 8) < rdp_sgm(0.1, 1.0, 8) < rdp_sgm(1.0, 1.0, 8)
+
+
+def test_epsilon_monotonicity():
+    e1 = compute_epsilon(1.0, 0.01, 1000, 1e-5)
+    assert e1 < compute_epsilon(1.0, 0.01, 4000, 1e-5)  # more steps
+    assert e1 > compute_epsilon(2.0, 0.01, 1000, 1e-5)  # more noise
+    assert e1 < compute_epsilon(1.0, 0.04, 1000, 1e-5)  # bigger q
+
+
+def test_calibration_roundtrip():
+    sigma = calibrate_sigma(3.0, 0.01, 2000, 1e-5)
+    eps = compute_epsilon(sigma, 0.01, 2000, 1e-5)
+    assert eps <= 3.0 + 1e-6
+    assert eps > 2.5  # not absurdly conservative
+
+
+def test_budget_for_gpt2_e2e_setting():
+    """Paper-style setting: E2E dataset ~42k samples, eps=3."""
+    b = budget_for(3.0, 1e-5, batch_size=1024, dataset_size=42000, epochs=10)
+    assert b.epsilon <= 3.0
+    assert 0.3 < b.sigma < 5.0
+    assert b.steps == math.ceil(10 * 42000 / 1024)

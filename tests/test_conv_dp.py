@@ -1,0 +1,99 @@
+"""Conv ghost norm (paper Sec. 3 / Bu et al. 2022a): a small CNN trained
+with BK equals Opacus exactly, and the layerwise hybrid decision picks the
+right branch in both feature-dimension regimes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ghost
+from repro.core.bk import DPConfig
+from repro.core.engine import make_grad_fn
+from repro.models import layers as L
+from repro.utils.tree import flatten
+
+B, H, W, C, NC = 4, 8, 8, 3, 5
+
+
+class TinyCNN:
+    """conv3x3 -> relu -> conv3x3(s2) -> relu -> gap -> linear."""
+
+    def init(self, rng):
+        ks = jax.random.split(rng, 3)
+        return {
+            "c1": L.conv2d_init(ks[0], 3, 3, C, 8, jnp.float32, bias=True),
+            "c2": L.conv2d_init(ks[1], 3, 3, 8, 16, jnp.float32),
+            "head": L.linear_init(ks[2], 16, NC, jnp.float32, bias=True),
+        }
+
+    def apply(self, params, batch, tape):
+        x = batch["x"]
+        x = jax.nn.relu(L.conv2d(tape, "c1", params["c1"], x, 3, 3))
+        x = jax.nn.relu(L.conv2d(tape, "c2", params["c2"], x, 3, 3, stride=2))
+        x = jnp.mean(x, axis=(1, 2))[:, None, :]          # GAP -> (B,1,16)
+        logits = L.linear(tape, "head", params["head"], x)[:, 0]
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, batch["y"][:, None], axis=-1)[:, 0]
+        return logz - gold
+
+
+def _setup():
+    model = TinyCNN()
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"x": jax.random.normal(jax.random.PRNGKey(1), (B, H, W, C)),
+             "y": jax.random.randint(jax.random.PRNGKey(2), (B,), 0, NC)}
+    return model, params, batch
+
+
+@pytest.mark.parametrize("mode", ["bk", "bk-mixopt", "bk-mixghost",
+                                  "ghostclip"])
+def test_cnn_bk_equals_opacus(mode):
+    model, params, batch = _setup()
+    ref, ra = make_grad_fn(model.apply, DPConfig(mode="opacus"))(
+        params, batch, jax.random.PRNGKey(3))
+    got, ga = make_grad_fn(model.apply, DPConfig(mode=mode))(
+        params, batch, jax.random.PRNGKey(3))
+    np.testing.assert_allclose(ga["per_sample_norms"], ra["per_sample_norms"],
+                               rtol=1e-5, atol=1e-6)
+    for (p, g), (_, r) in zip(sorted(flatten(got).items()),
+                              sorted(flatten(ref).items())):
+        np.testing.assert_allclose(g, r, rtol=1e-4, atol=1e-6, err_msg=p)
+
+
+def test_conv_hybrid_decision_regimes():
+    """Early conv (large T, tiny pd) -> instantiation; late/fc -> ghost —
+    the paper's Table 4 layerwise pattern."""
+    # conv1 of ResNet18 at 224x224: T=112^2, d=3*49, p=64
+    assert not ghost.prefer_ghost(T=112 * 112, d=147, p=64)
+    # fc: T=1
+    assert ghost.prefer_ghost(T=1, d=512, p=1000)
+
+
+def test_conv_record_shapes():
+    from repro.core.tape import Tape
+    model, params, batch = _setup()
+    tape = Tape(None)
+    model.apply(params, batch, tape)
+    a1 = tape.acts["c1#mm"]
+    assert a1.shape == (B, H * W, 3 * 3 * C)      # T = H'*W', d = kh*kw*C
+    a2 = tape.acts["c2#mm"]
+    assert a2.shape == (B, (H // 2) * (W // 2), 3 * 3 * 8)
+
+
+def test_cnn_dp_training_reduces_loss():
+    model, params, batch = _setup()
+    fn = jax.jit(make_grad_fn(model.apply,
+                              DPConfig(mode="bk-mixopt", sigma=0.1)))
+    from repro.core.tape import Tape
+
+    def loss(p):
+        return jnp.mean(model.apply(p, batch, Tape(None)))
+
+    l0 = float(loss(params))
+    for step in range(15):
+        grads, _ = fn(params, batch, jax.random.fold_in(jax.random.PRNGKey(5),
+                                                        step))
+        params = jax.tree_util.tree_map(lambda p, g: p - 5e-2 * g, params,
+                                        grads)
+    assert float(loss(params)) < l0

@@ -1,0 +1,106 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode): shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+SHAPES_MM = [(2, 16, 8, 12), (1, 128, 32, 16), (3, 100, 24, 40), (2, 256, 64, 64)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _mk(shape, dtype, seed=0):
+    k = jax.random.PRNGKey(seed)
+    return jax.random.normal(k, shape, jnp.float32).astype(dtype)
+
+
+@pytest.mark.parametrize("B,T,d,p", SHAPES_MM)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_ghost_norm_kernel(B, T, d, p, dtype):
+    a, ds = _mk((B, T, d), dtype), _mk((B, T, p), dtype, 1)
+    want = ref.ghost_norm_ref(a, ds)
+    got = ops.ghost_norm_mm(a, ds, block_t=32)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("B,T,d,p", SHAPES_MM)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_direct_norm_kernel(B, T, d, p, dtype):
+    a, ds = _mk((B, T, d), dtype), _mk((B, T, p), dtype, 1)
+    want = ref.grad_norm_direct_ref(a, ds)
+    got = ops.direct_norm_mm(a, ds, block_d=16, block_p=16)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_ghost_equals_direct_kernels():
+    a, ds = _mk((2, 64, 24, 1)[:3] + (24,), jnp.float32), _mk((2, 64, 40), jnp.float32, 3)
+    a = _mk((2, 64, 24), jnp.float32)
+    np.testing.assert_allclose(ops.ghost_norm_mm(a, ds, block_t=16),
+                               ops.direct_norm_mm(a, ds, block_d=8, block_p=8),
+                               rtol=1e-4)
+
+
+@pytest.mark.parametrize("B,T,d,p", [(2, 16, 8, 12), (3, 64, 40, 24)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_clipped_grad_kernel(B, T, d, p, dtype):
+    a, ds = _mk((B, T, d), dtype), _mk((B, T, p), dtype, 1)
+    C = jnp.abs(_mk((B,), jnp.float32, 2)) + 0.1
+    want = ref.clipped_grad_ref(a, C, ds)
+    got = ops.clipped_grad_mm(a, C, ds, block_d=16, block_p=16)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_stacked_layouts():
+    a, ds = _mk((3, 2, 32, 8), jnp.float32), _mk((3, 2, 32, 12), jnp.float32, 1)
+    from repro.core import ghost
+    np.testing.assert_allclose(ops.ghost_norm_mm(a, ds, block_t=16),
+                               ghost.sq_norm_mm_ghost(a, ds), rtol=1e-4)
+    C = jnp.asarray([0.5, 2.0])
+    np.testing.assert_allclose(
+        ops.clipped_grad_mm(a, C, ds, block_d=8, block_p=8),
+        ghost.weighted_grad_mm(a, C, ds, jnp.float32), rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("B,T,S,H,K,h", [(1, 64, 64, 4, 2, 16),
+                                         (2, 128, 128, 4, 4, 32)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_flash_attention_kernel(B, T, S, H, K, h, causal, dtype):
+    q = _mk((B, T, H, h), dtype)
+    k = _mk((B, S, K, h), dtype, 1)
+    v = _mk((B, S, K, h), dtype, 2)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    got = ops.flash_attention(q, k, v, causal=causal, block_q=32, block_k=32)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("B,T,H,h", [(1, 16, 2, 8), (2, 50, 3, 16), (1, 64, 2, 64)])
+def test_wkv6_kernel(B, T, H, h):
+    keys = jax.random.split(jax.random.PRNGKey(0), 5)
+    r = jax.random.normal(keys[0], (B, T, H, h))
+    k = jax.random.normal(keys[1], (B, T, H, h))
+    v = jax.random.normal(keys[2], (B, T, H, h))
+    w = jax.random.uniform(keys[3], (B, T, H, h), minval=0.5, maxval=0.999)
+    u = jax.random.normal(keys[4], (H, h)) * 0.5
+    want = ref.wkv6_ref(r, k, v, w, u)
+    got = ops.wkv6(r, k, v, w, u, chunk=16)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_banded_attention_matches_masked_full():
+    from repro.models.attention import banded_attention, multihead_attention
+    B, T, H, K, h, W = 2, 128, 4, 2, 16, 32
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (B, T, H, h))
+    k = jax.random.normal(ks[1], (B, T, K, h))
+    v = jax.random.normal(ks[2], (B, T, K, h))
+    want = multihead_attention(q, k, v, causal=True, window=W)
+    got = banded_attention(q, k, v, window=W, chunk=32)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=2e-5, atol=2e-5)
