@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 tests + fast benchmark validation + kernel bench.
+#
+#   bash scripts/ci.sh
+#
+# Runs everything even if an early stage fails (so one run collects every
+# signal), then exits with the tier-1 status.
+set -uo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -q
+tier1=$?
+
+echo "== benchmarks: validation (--fast) =="
+python -m benchmarks.run --fast
+bench=$?
+
+echo "== benchmarks: kernel bench (--fast) =="
+python -m benchmarks.kernel_bench --fast
+kern=$?
+
+echo "ci summary: tier1=$tier1 bench=$bench kernel_bench=$kern"
+exit $(( tier1 != 0 ? tier1 : (bench != 0 ? bench : kern) ))

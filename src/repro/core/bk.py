@@ -24,7 +24,7 @@ Modes:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Callable
 
 import jax
@@ -47,7 +47,7 @@ class DPConfig:
     R: float = 1.0                   # clipping threshold / normalizer
     sigma: float = 0.0               # noise multiplier (0 = clipping only)
     mode: str = "bk"                 # implementation (BK_MODES + baselines)
-    use_kernels: bool = False        # dispatch fused Pallas kernels
+    use_kernels: bool = True         # fused Pallas kernels via kernels.dispatch
     gamma: float = 0.01              # automatic-clipping stability constant
 
     def clip_fn(self) -> Callable:
@@ -92,58 +92,123 @@ def split_param_paths(params, tap_struct):
 def record_sq_norm(key: str, act, ds, mode: str, use_kernels: bool):
     """Per-sample squared norm for one tapped op.
 
-    Returns (sq_norms (B,), cached) where cached optionally carries the
-    instantiated per-sample grads for mixopt reuse in phase 3.
+    Every kind routes through kernels.dispatch: the plan fixes ghost-vs-direct
+    (the paper's layerwise rule; mode 'bk' forces ghost) and, when
+    ``use_kernels``, whether the fused Pallas kernel or the jnp einsum runs
+    plus its block sizes. Returns (sq_norms (B,), cached) where cached
+    optionally carries the instantiated per-sample grads for mixopt reuse in
+    phase 3.
     """
+    from repro.kernels import dispatch
     _, kind, _ = parse_key(key)
     if kind == "mm":
-        T, d, p = act.shape[-2], act.shape[-1], ds.shape[-1]
-        use_ghost = mode == "bk" or ghost.prefer_ghost(T, d, p)
-        if use_ghost:
-            if use_kernels:
+        plan = dispatch.norm_plan("mm", act.shape, ds.shape, mode)
+        fused = use_kernels and plan.impl == "kernel"
+        if plan.method == "ghost":
+            if fused:
                 from repro.kernels import ops as kops
-                return kops.ghost_norm_mm(act, ds), None
+                return kops.ghost_norm_mm(act, ds, **plan.kwargs()), None
             return ghost.sq_norm_mm_ghost(act, ds), None
-        B = act.shape[-3]
+        B, d, p = act.shape[-3], act.shape[-1], ds.shape[-1]
         L = act.shape[0] if act.ndim == 4 else 1
         small = L * B * d * p <= ghost.MAP_THRESHOLD
-        if mode == "bk-mixopt" and not use_kernels and small:
-            # instantiate once, reuse for module 5 in phase 3 (only when the
-            # per-sample grads are cheap to keep; else phase 3 re-einsums)
+        if mode == "bk-mixopt" and small:
+            # mixopt's defining move (paper Sec 3.3): instantiate once, reuse
+            # for module 5 in phase 3. Takes precedence over the fused kernel
+            # — the kernel saves the per-sample-grad space, but mixopt chose
+            # direct *because* it is willing to spend that space to halve the
+            # phase-3 FLOPs; only cache when cheap to keep (else re-einsum)
             eq = "lbtd,lbtp->lbdp" if act.ndim == 4 else "btd,btp->bdp"
             g = jnp.einsum(eq, act.astype(F32), ds.astype(F32))
             axes = tuple(i for i in range(g.ndim) if i != (1 if g.ndim == 4 else 0))
             return jnp.sum(g * g, axis=axes), g
-        if use_kernels:
+        if fused:
             from repro.kernels import ops as kops
-            return kops.direct_norm_mm(act, ds), None
+            return kops.direct_norm_mm(act, ds, **plan.kwargs()), None
         return ghost.sq_norm_mm_direct(act, ds), None
     if kind == "emb":
+        plan = dispatch.norm_plan("emb", act.shape, ds.shape, mode)
+        if use_kernels and plan.impl == "kernel":
+            from repro.kernels import ops as kops
+            return kops.ghost_norm_emb(act, ds, **plan.kwargs()), None
         return ghost.sq_norm_emb(act, ds), None
     if kind == "moe":
-        C, d, p = act["a"].shape[-2], act["a"].shape[-1], ds.shape[-1]
-        if mode == "bk" or ghost.prefer_ghost(C, d, p):
+        plan = dispatch.norm_plan("moe", act["a"].shape, ds.shape, mode)
+        fused = use_kernels and plan.impl == "kernel"
+        if plan.method == "ghost":
+            if fused:
+                from repro.kernels import ops as kops
+                return kops.ghost_norm_moe(act, ds), None
             return ghost.sq_norm_moe_ghost(act, ds), None
+        if fused:
+            from repro.kernels import ops as kops
+            return kops.direct_norm_moe(act, ds, **plan.kwargs()), None
         return ghost.sq_norm_moe_direct(act, ds), None
     raise ValueError(f"unknown tap kind in key {key!r}")
 
 
 def record_weighted_grad(key: str, act, ds, C, cached, use_kernels: bool,
                          out_dtype, vocab: int = 0):
+    from repro.kernels import dispatch
     _, kind, _ = parse_key(key)
     if kind == "mm":
         if cached is not None:  # mixopt module-5 reuse: sum_i C_i g_i (2Bpd)
             eq = "lbdp,b->ldp" if cached.ndim == 4 else "bdp,b->dp"
             return jnp.einsum(eq, cached, C.astype(F32)).astype(out_dtype)
         if use_kernels:
-            from repro.kernels import ops as kops
-            return kops.clipped_grad_mm(act, C, ds).astype(out_dtype)
+            plan = dispatch.grad_plan("mm", act.shape, ds.shape)
+            if plan.impl == "kernel":
+                from repro.kernels import ops as kops
+                return kops.clipped_grad_mm(act, C, ds,
+                                            **plan.kwargs()).astype(out_dtype)
         return ghost.weighted_grad_mm(act, C, ds, out_dtype)
     if kind == "emb":
+        if use_kernels:
+            plan = dispatch.grad_plan("emb", act.shape, ds.shape, vocab)
+            if plan.impl == "kernel":
+                from repro.kernels import ops as kops
+                return kops.clipped_grad_emb(act, C, ds, vocab,
+                                             **plan.kwargs()).astype(out_dtype)
         return ghost.weighted_grad_emb(act, C, ds, vocab, out_dtype)
     if kind == "moe":
+        if use_kernels:
+            plan = dispatch.grad_plan("moe", act["a"].shape, ds.shape)
+            if plan.impl == "kernel":
+                from repro.kernels import ops as kops
+                return kops.clipped_grad_moe(act, C, ds,
+                                             **plan.kwargs()).astype(out_dtype)
         return ghost.weighted_grad_moe(act, C, ds, out_dtype)
     raise ValueError(f"unknown tap kind in key {key!r}")
+
+
+def plan_report(apply_fn, params, batch, cfg: DPConfig) -> dict:
+    """Resolved kernel-dispatch plans per tap, from one free eval_shape pass.
+
+    -> {tap_key: {'norm': Plan, 'grad': Plan}} — observability for the
+    engine/benchmarks; no compute."""
+    from repro.kernels import dispatch
+
+    def shape_run(p, b):
+        tape = Tape(None)
+        apply_fn(p, b, tape)
+        return tape.tap_zeros, tape.acts
+
+    taps, acts = jax.eval_shape(shape_run, params, batch)
+    flat_params = flatten(params)
+    report = {}
+    for key in sorted(acts):
+        path, kind, _ = parse_key(key)
+        a_shape = acts[key]["a"].shape if kind == "moe" else acts[key].shape
+        vocab = flat_params[path + "/w"].shape[-2] if kind == "emb" else 0
+        plans = {
+            "norm": dispatch.norm_plan(kind, a_shape, taps[key].shape,
+                                       cfg.mode),
+            "grad": dispatch.grad_plan(kind, a_shape, taps[key].shape, vocab),
+        }
+        if not cfg.use_kernels:  # report what will actually run
+            plans = {k: replace(p, impl="jnp") for k, p in plans.items()}
+        report[key] = plans
+    return report
 
 
 # ------------------------------------------------------------------- BK core

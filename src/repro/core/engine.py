@@ -16,7 +16,7 @@ from typing import Callable
 
 from repro.core import baselines
 from repro.core.accounting import budget_for
-from repro.core.bk import BK_MODES, DPConfig, bk_private_grad
+from repro.core.bk import BK_MODES, DPConfig, bk_private_grad, plan_report
 
 _BASELINES = {
     "nonprivate": baselines.nonprivate_grad,
@@ -54,4 +54,12 @@ class PrivacyEngine:
         else:
             self.budget = None
         self.cfg = cfg
+        self.apply_fn = apply_fn
         self.grad = make_grad_fn(apply_fn, cfg)
+
+    def kernel_report(self, params, batch) -> dict:
+        """Per-tap kernel dispatch plans (impl/method/blocks) for this model
+        and batch shape — one free eval_shape pass, no compute. Lets users
+        see (and log) what ``use_kernels`` will actually run before training.
+        """
+        return plan_report(self.apply_fn, params, batch, self.cfg)

@@ -137,13 +137,18 @@ def weighted_grad_emb(ids: jnp.ndarray, C: jnp.ndarray, ds: jnp.ndarray,
                       vocab: int, out_dtype=None) -> jnp.ndarray:
     """G = sum_i C_i sum_t onehot(id_it) ds_it  -> (V,d). Scatter-add."""
     out_dtype = out_dtype or ds.dtype
-    if ids.ndim == 3:  # stacked embeddings: scatter per layer
-        L = ids.shape[0]
-        w = (_f32(ds) * C[None, :, None, None]).reshape(L, -1, ds.shape[-1])
-        flat_ids = ids.reshape(L, -1)
-        out = jnp.zeros((L, vocab, ds.shape[-1]), F32)
-        out = jnp.stack([out[l].at[flat_ids[l]].add(w[l]) for l in range(L)])
-        return out.astype(out_dtype)
+    if ids.ndim == 3:  # stacked embeddings: ONE segment-sum over all layers,
+        # ids offset by l*vocab so each layer scatters into its own row block.
+        # Out-of-range ids (pad/sentinel tokens) must keep the per-layer
+        # scatter's drop semantics: route them to an OOB flat index instead
+        # of letting the offset fold them into the next layer's rows.
+        L, d = ids.shape[0], ds.shape[-1]
+        w = (_f32(ds) * C[None, :, None, None]).reshape(-1, d)
+        off = jnp.arange(L, dtype=ids.dtype)[:, None, None] * vocab
+        valid = (ids >= 0) & (ids < vocab)
+        flat_ids = jnp.where(valid, ids + off, L * vocab).reshape(-1)
+        out = jnp.zeros((L * vocab, d), F32).at[flat_ids].add(w, mode="drop")
+        return out.reshape(L, vocab, d).astype(out_dtype)
     w = (_f32(ds) * C[:, None, None]).reshape(-1, ds.shape[-1])
     flat_ids = ids.reshape(-1)
     out = jnp.zeros((vocab, ds.shape[-1]), F32).at[flat_ids].add(w)

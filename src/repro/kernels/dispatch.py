@@ -1,0 +1,243 @@
+"""Kernel dispatch + autotune: the policy layer over the fused Pallas kernels.
+
+Extends the paper's layerwise ghost-vs-direct rule (He et al. 2022;
+``ghost.prefer_ghost``) one level down — from *algorithm* choice to *kernel*
+choice — per tapped op:
+
+  1. method   ghost vs direct, from the 2T^2 <-> pd space rule (mode 'bk'
+              forces ghost, matching the engine's mode semantics);
+  2. impl     fused Pallas kernel vs pure-jnp einsum: the kernel's win is
+              never materializing the Gram / per-sample-grad intermediate in
+              HBM, so records whose intermediate is tiny (fits in registers
+              anyway, launch overhead dominates) stay on the jnp path;
+  3. blocks   tile sizes chosen so one grid step's operands fit the VMEM
+              working-set budget, snapped to hardware-friendly multiples.
+
+Plans are cached per (kind, method, shape, backend). ``autotune`` replaces
+the analytic block choice with measured timings on synthetic data (run it
+OUTSIDE jit — e.g. from benchmarks/kernel_bench.py or engine warmup — the
+measured blocks then win the cache for identical shapes). Environment knobs:
+
+  REPRO_KERNELS=0        force the jnp path everywhere (kill switch)
+  REPRO_KERNELS=1        plan the kernel impl even for tiny records (the
+                         engine still honors DPConfig.use_kernels=False)
+  REPRO_KERNEL_MIN=<n>   impl threshold, in intermediate elements (def. 256)
+"""
+from __future__ import annotations
+
+import functools
+import os
+import time
+from dataclasses import dataclass
+
+import jax
+
+# f32 bytes one grid step may hold in VMEM (half of ~16 MB/core, leaving the
+# other half to Mosaic's double buffering of the next step's blocks)
+VMEM_BUDGET = 6 * 2 ** 20
+
+# below this many elements for the avoided intermediate, a fused kernel
+# cannot pay for its launch: stay on the (fully XLA-fusable) jnp path
+KERNEL_MIN_INTERMEDIATE = 256
+
+_BT_CANDIDATES = (1024, 512, 256, 128, 64, 32, 16, 8)
+_BDP_CANDIDATES = (1024, 512, 256, 128, 64, 32, 16, 8)
+_BV_CANDIDATES = (4096, 2048, 1024, 512, 256, 128)
+
+_plan_cache: dict = {}
+
+
+def backend() -> str:
+    return jax.default_backend()
+
+
+def _rup(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@dataclass(frozen=True)
+class Plan:
+    impl: str        # 'kernel' | 'jnp'
+    method: str      # 'ghost' | 'direct' | 'scatter' (emb grad)
+    blocks: tuple    # ((name, value), ...) kwargs for the kernels.ops wrapper
+
+    def kwargs(self) -> dict:
+        return dict(self.blocks)
+
+
+# ------------------------------------------------------------- block model
+def block_t_ghost(T: int, d: int, p: int) -> int:
+    """Tile of the packed-triangular ghost-norm grid: 2bt(d+p) operands plus
+    3bt^2 live Gram registers per step."""
+    cap = _rup(min(T, _BT_CANDIDATES[0]), 8)
+    for bt in _BT_CANDIDATES:
+        if bt <= cap and 4 * (2 * bt * (d + p) + 3 * bt * bt) <= VMEM_BUDGET:
+            return bt
+    return 8
+
+
+def block_dp(T: int, d: int, p: int) -> tuple:
+    """(bd, bp) for the instantiation-style grids: T(bd+bp) operands plus a
+    bd*bp tile per step."""
+    capd = _rup(min(d, _BDP_CANDIDATES[0]), 8)
+    capp = _rup(min(p, _BDP_CANDIDATES[0]), 8)
+    for b in _BDP_CANDIDATES:
+        bd, bp = min(b, capd), min(b, capp)
+        if 4 * (T * (bd + bp) + bd * bp) <= VMEM_BUDGET:
+            return bd, bp
+    return 8, 8
+
+
+def block_v(T: int, d: int, vocab: int) -> int:
+    """Vocab tile of the clipped-embedding-grad grid: T*bv one-hot + bv*d
+    output tile + T*d cotangents per step."""
+    cap = _rup(min(vocab, _BV_CANDIDATES[0]), 128)
+    for bv in _BV_CANDIDATES:
+        if bv <= cap and 4 * (T * bv + bv * d + T * d) <= VMEM_BUDGET:
+            return bv
+    return 128
+
+
+# -------------------------------------------------------------- impl model
+def _env_state() -> tuple:
+    return (os.environ.get("REPRO_KERNELS", ""),
+            os.environ.get("REPRO_KERNEL_MIN", ""))
+
+
+def _impl(intermediate_elems: int) -> str:
+    force, min_ = _env_state()
+    if force == "0":
+        return "jnp"
+    if force == "1":
+        return "kernel"
+    thresh = int(min_) if min_ else KERNEL_MIN_INTERMEDIATE
+    return "kernel" if intermediate_elems >= thresh else "jnp"
+
+
+def _cached(key, mk_plan):
+    # env knobs are part of the key so flipping REPRO_KERNELS mid-process
+    # invalidates previously planned shapes rather than being ignored
+    key = key + _env_state()
+    plan = _plan_cache.get(key)
+    if plan is None:
+        plan = mk_plan()
+        _plan_cache[key] = plan
+    return plan
+
+
+# ------------------------------------------------------------------- plans
+def norm_plan(kind: str, act_shape, ds_shape, mode: str) -> Plan:
+    """Per-tap plan for the phase-2 per-sample squared norm."""
+    key = ("norm", kind, tuple(act_shape), tuple(ds_shape), mode, backend())
+
+    def mk():
+        if kind == "mm":
+            a = act_shape if len(act_shape) == 4 else (1,) + tuple(act_shape)
+            L, B, T, d = a
+            p = ds_shape[-1]
+            from repro.core.ghost import prefer_ghost
+            method = "ghost" if mode == "bk" or prefer_ghost(T, d, p) \
+                else "direct"
+            inter = L * B * (2 * T * T if method == "ghost" else d * p)
+            blocks = (("block_t", block_t_ghost(T, d, p)),) \
+                if method == "ghost" else \
+                tuple(zip(("block_d", "block_p"), block_dp(T, d, p)))
+            return Plan(_impl(inter), method, blocks)
+        if kind == "emb":
+            ids = act_shape if len(act_shape) == 3 else (1,) + tuple(act_shape)
+            L, B, T = ids
+            d = ds_shape[-1]
+            # ghost is the only sane norm for embeddings: direct would
+            # instantiate (B, V, d)
+            return Plan(_impl(L * B * T * T), "ghost",
+                        (("block_t", block_t_ghost(T, d, d)),))
+        if kind == "moe":
+            a = act_shape if len(act_shape) == 5 else (1,) + tuple(act_shape)
+            L, B, E, C, d = a
+            p = ds_shape[-1]
+            from repro.core.ghost import prefer_ghost
+            method = "ghost" if mode == "bk" or prefer_ghost(C, d, p) \
+                else "direct"
+            inter = L * B * E * (2 * C * C if method == "ghost" else d * p)
+            blocks = () if method == "ghost" else \
+                tuple(zip(("block_d", "block_p"), block_dp(C, d, p)))
+            return Plan(_impl(inter), method, blocks)
+        raise ValueError(f"unknown tap kind {kind!r}")
+
+    return _cached(key, mk)
+
+
+def grad_plan(kind: str, act_shape, ds_shape, vocab: int = 0) -> Plan:
+    """Per-tap plan for the phase-3 clip-weighted gradient (BK line 9)."""
+    key = ("grad", kind, tuple(act_shape), tuple(ds_shape), vocab, backend())
+
+    def mk():
+        if kind == "mm":
+            a = act_shape if len(act_shape) == 4 else (1,) + tuple(act_shape)
+            L, B, T, d = a
+            p = ds_shape[-1]
+            # the kernel fuses diag(C): the avoided HBM intermediate is the
+            # (L,B,T,p) weighted cotangent copy
+            return Plan(_impl(L * B * T * p), "direct",
+                        tuple(zip(("block_d", "block_p"), block_dp(T, d, p))))
+        if kind == "emb":
+            ids = act_shape if len(act_shape) == 3 else (1,) + tuple(act_shape)
+            L, B, T = ids
+            d = ds_shape[-1]
+            return Plan(_impl(L * B * T * d), "scatter",
+                        (("block_v", block_v(T, d, vocab)),))
+        if kind == "moe":
+            a = act_shape if len(act_shape) == 5 else (1,) + tuple(act_shape)
+            L, B, E, C, d = a
+            p = ds_shape[-1]
+            return Plan(_impl(L * B * E * C * p), "direct",
+                        tuple(zip(("block_d", "block_p"), block_dp(C, d, p))))
+        raise ValueError(f"unknown tap kind {kind!r}")
+
+    return _cached(key, mk)
+
+
+# ---------------------------------------------------------------- autotune
+def _time(fn, *args, reps: int = 3) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def autotune(run_fn, candidates, *args) -> tuple:
+    """Measure ``run_fn(*args, **dict(cand))`` per candidate block tuple and
+    return the fastest. Call OUTSIDE jit with concrete arrays; feed the
+    winner back via the plan cache (see ``override_blocks``)."""
+    best, best_t, last_err = None, float("inf"), None
+    for cand in candidates:
+        try:
+            t = _time(functools.partial(run_fn, **dict(cand)), *args)
+        except Exception as e:  # candidate invalid for this shape/backend
+            last_err = e
+            continue
+        if t < best_t:
+            best, best_t = cand, t
+    if best is None:
+        raise ValueError("no autotune candidate succeeded") from last_err
+    return tuple(best)
+
+
+def override_blocks(key_prefix: str, kind: str, act_shape, ds_shape,
+                    blocks: tuple, mode: str = "bk", vocab: int = 0) -> None:
+    """Pin measured blocks for one (kind, shape): subsequent plans use them."""
+    if key_prefix == "norm":
+        plan = norm_plan(kind, act_shape, ds_shape, mode)
+        key = ("norm", kind, tuple(act_shape), tuple(ds_shape), mode, backend())
+    else:
+        plan = grad_plan(kind, act_shape, ds_shape, vocab)
+        key = ("grad", kind, tuple(act_shape), tuple(ds_shape), vocab, backend())
+    _plan_cache[key + _env_state()] = Plan(plan.impl, plan.method,
+                                           tuple(blocks))
+
+
+def clear_cache() -> None:
+    _plan_cache.clear()

@@ -1,12 +1,16 @@
 """Fused direct-norm Pallas kernel (TPU): per-sample squared gradient norms
 via instantiation,
 
-    n_b = || a_b^T g_b ||_F^2
+    n_b = sum_l || a_lb^T g_lb ||_F^2
 
 computed (d,p)-tile by tile **without materializing the (B,d,p) per-sample
 gradients in HBM** — removes the Bpd space term of module 4 (the reason
 Opacus "cannot scale to large models"), so the MixOpt hybrid decision becomes
-a pure time tradeoff. Grid (B, d/bd, p/bp)."""
+a pure time tradeoff.
+
+Grid (B, L, d/bd, p/bp): stacked (L,B,T,d) records run as ONE kernel launch
+via the L grid axis — out[b] stays resident while every (layer, tile) pair
+accumulates into it."""
 from __future__ import annotations
 
 import functools
@@ -19,15 +23,16 @@ F32 = jnp.float32
 
 
 def _kernel(a_ref, g_ref, out_ref):
-    i = pl.program_id(1)
-    j = pl.program_id(2)
+    l = pl.program_id(1)
+    i = pl.program_id(2)
+    j = pl.program_id(3)
 
-    @pl.when((i == 0) & (j == 0))
+    @pl.when((l == 0) & (i == 0) & (j == 0))
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    a = a_ref[0].astype(F32)                 # (T, bd)
-    g = g_ref[0].astype(F32)                 # (T, bp)
+    a = a_ref[0, 0].astype(F32)              # (T, bd)
+    g = g_ref[0, 0].astype(F32)              # (T, bp)
     tile = jax.lax.dot_general(a, g, (((0,), (0,)), ((), ())),
                                preferred_element_type=F32)  # (bd, bp)
     out_ref[0] += jnp.sum(tile * tile)
@@ -36,25 +41,27 @@ def _kernel(a_ref, g_ref, out_ref):
 @functools.partial(jax.jit, static_argnames=("block_d", "block_p", "interpret"))
 def grad_norm_direct(a, ds, block_d: int = 256, block_p: int = 256,
                      interpret: bool = False):
-    """a (B,T,d), ds (B,T,p) -> (B,) f32."""
-    B, T, d = a.shape
+    """a (L,B,T,d) or (B,T,d), ds likewise -> (B,) f32."""
+    if a.ndim == 3:
+        a, ds = a[None], ds[None]
+    L, B, T, d = a.shape
     p = ds.shape[-1]
     bd, bp = min(block_d, d), min(block_p, p)
     if d % bd:
-        a = jnp.pad(a, ((0, 0), (0, 0), (0, bd - d % bd)))
+        a = jnp.pad(a, ((0, 0), (0, 0), (0, 0), (0, bd - d % bd)))
         d = a.shape[-1]
     if p % bp:
-        ds = jnp.pad(ds, ((0, 0), (0, 0), (0, bp - p % bp)))
+        ds = jnp.pad(ds, ((0, 0), (0, 0), (0, 0), (0, bp - p % bp)))
         p = ds.shape[-1]
 
     out = pl.pallas_call(
         _kernel,
-        grid=(B, d // bd, p // bp),
+        grid=(B, L, d // bd, p // bp),
         in_specs=[
-            pl.BlockSpec((1, T, bd), lambda b, i, j: (b, 0, i)),
-            pl.BlockSpec((1, T, bp), lambda b, i, j: (b, 0, j)),
+            pl.BlockSpec((1, 1, T, bd), lambda b, l, i, j: (l, b, 0, i)),
+            pl.BlockSpec((1, 1, T, bp), lambda b, l, i, j: (l, b, 0, j)),
         ],
-        out_specs=pl.BlockSpec((1,), lambda b, i, j: (b,)),
+        out_specs=pl.BlockSpec((1,), lambda b, l, i, j: (b,)),
         out_shape=jax.ShapeDtypeStruct((B,), F32),
         interpret=interpret,
     )(a, ds)

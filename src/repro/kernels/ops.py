@@ -1,16 +1,22 @@
 """Jit'd wrappers around the Pallas kernels, with the layout handling the DP
-engine expects (stacked layer dims, padding) and automatic interpret-mode on
-CPU (kernels are validated on CPU via interpret=True; TPU v5e is the compile
-target)."""
+engine expects (stacked layer dims, padding, moe record dicts) and automatic
+interpret-mode on CPU (kernels are validated on CPU via interpret=True; TPU
+v5e is the compile target). Policy — which kernel, which blocks — lives in
+repro.kernels.dispatch; these wrappers are pure mechanism."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.clipped_grad import clipped_grad as _clipped_grad
+from repro.kernels.emb_grad import emb_clipped_grad as _emb_grad
+from repro.kernels.emb_norm import emb_ghost_norm as _emb_norm
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.ghost_norm import ghost_norm as _ghost_norm
 from repro.kernels.grad_norm_direct import grad_norm_direct as _direct
+from repro.kernels.moe_ghost import (moe_clipped_grad as _moe_grad,
+                                     moe_direct_norm as _moe_direct,
+                                     moe_ghost_norm as _moe_ghost)
 from repro.kernels.wkv6 import wkv6 as _wkv6
 
 
@@ -18,39 +24,53 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+# ------------------------------------------------------------------ mm taps
 def ghost_norm_mm(a, ds, block_t: int = 128):
     """(B,T,d)/(L,B,T,d) records -> per-sample sq norms (B,)."""
-    if a.ndim == 4:
-        L, B = a.shape[0], a.shape[1]
-        n = _ghost_norm(a.reshape((L * B,) + a.shape[2:]),
-                        ds.reshape((L * B,) + ds.shape[2:]),
-                        block_t=block_t, interpret=_interpret())
-        return n.reshape(L, B).sum(0)
     return _ghost_norm(a, ds, block_t=block_t, interpret=_interpret())
 
 
 def direct_norm_mm(a, ds, block_d: int = 256, block_p: int = 256):
-    if a.ndim == 4:
-        L, B = a.shape[0], a.shape[1]
-        n = _direct(a.reshape((L * B,) + a.shape[2:]),
-                    ds.reshape((L * B,) + ds.shape[2:]),
-                    block_d=block_d, block_p=block_p, interpret=_interpret())
-        return n.reshape(L, B).sum(0)
     return _direct(a, ds, block_d=block_d, block_p=block_p,
                    interpret=_interpret())
 
 
 def clipped_grad_mm(a, C, ds, block_d: int = 256, block_p: int = 256):
-    """-> (d,p) f32, or (L,d,p) for stacked records."""
-    if a.ndim == 4:
-        fn = lambda al, dsl: _clipped_grad(al, C, dsl, block_d=block_d,
-                                           block_p=block_p,
-                                           interpret=_interpret())
-        return jax.vmap(fn)(a, ds)
+    """-> (d,p) f32, or (L,d,p) for stacked records. One launch either way."""
     return _clipped_grad(a, C, ds, block_d=block_d, block_p=block_p,
                          interpret=_interpret())
 
 
+# ----------------------------------------------------------------- emb taps
+def ghost_norm_emb(ids, ds, block_t: int = 128):
+    """ids (B,T)/(L,B,T) int, ds (B,T,d)/(L,B,T,d) -> (B,)."""
+    return _emb_norm(ids, ds, block_t=block_t, interpret=_interpret())
+
+
+def clipped_grad_emb(ids, C, ds, vocab: int, block_v: int = 512):
+    """-> (vocab,d) f32, or (L,vocab,d) for stacked records."""
+    return _emb_grad(ids, C, ds, vocab=vocab, block_v=block_v,
+                     interpret=_interpret())
+
+
+# ----------------------------------------------------------------- moe taps
+def ghost_norm_moe(rec, ds):
+    """rec {'a': (B,E,C,d)[+L], 'mask': (B,E,C)[+L]}, ds (B,E,C,p)[+L] -> (B,)."""
+    return _moe_ghost(rec["a"], rec["mask"], ds, interpret=_interpret())
+
+
+def direct_norm_moe(rec, ds, block_d: int = 256, block_p: int = 256):
+    return _moe_direct(rec["a"], rec["mask"], ds, block_d=block_d,
+                       block_p=block_p, interpret=_interpret())
+
+
+def clipped_grad_moe(rec, C, ds, block_d: int = 256, block_p: int = 256):
+    """-> (E,d,p) f32, or (L,E,d,p) for stacked records. One launch."""
+    return _moe_grad(rec["a"], rec["mask"], C, ds, block_d=block_d,
+                     block_p=block_p, interpret=_interpret())
+
+
+# ------------------------------------------------------------------- others
 def flash_attention(q, k, v, causal=True, block_q=128, block_k=128):
     return _flash(q, k, v, causal=causal, block_q=block_q, block_k=block_k,
                   interpret=_interpret())
