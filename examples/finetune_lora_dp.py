@@ -1,89 +1,110 @@
-"""DP-LoRA (paper Appendix E.2): BK applied to parameter-efficient
-fine-tuning. The base weights are frozen (closed over); only the low-rank
-A/B adapters are trained — each adapter matmul is a tapped generalized-linear
-op, so the ghost-norm/book-keeping machinery applies unchanged, with the
-paper's complexity (space 4BT^2 vs Br(p+d) for instantiation).
+"""DP-LoRA (paper Appendix E.2) via PrivacyPolicy frozen groups: the base
+model and the low-rank adapters live in ONE params tree; the policy freezes
+the base (``trainable=False`` — no tap differentiation, no per-sample norm,
+no weighted grad, no noise: zero book-keeping cost, the LoRA fast path) and
+clips the A/B adapters group-wise with their own thresholds.
+
+The kernel_report shows the frozen taps are truly gone — the engine does no
+work for them — and the adapter gradients still agree with an Opacus-style
+per-sample reference that honors the same policy.
 
     PYTHONPATH=src python examples/finetune_lora_dp.py
 """
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.bk import DPConfig
-from repro.core.engine import make_grad_fn
+from repro.core.engine import PrivacyEngine, make_grad_fn
+from repro.core.policy import ParamGroup, PrivacyPolicy
 from repro.core.tape import Tape
 from repro.models import layers as L
 
 D, FF, V, RANK, B, T = 64, 128, 256, 8, 8, 16
 
 
-def init_base(rng):
-    ks = jax.random.split(rng, 4)
-    return {
-        "embed": L.embedding_init(ks[0], V, D, jnp.float32),
-        "up": L.linear_init(ks[1], D, FF, jnp.float32),
-        "down": L.linear_init(ks[2], FF, D, jnp.float32),
-        "head": L.linear_init(ks[3], D, V, jnp.float32),
-    }
-
-
-def init_lora(rng):
-    ks = jax.random.split(rng, 4)
+def init_params(rng):
+    ks = jax.random.split(rng, 6)
     z = jnp.zeros
     lora = lambda k, din, dout: {
         "A": {"w": L.normal_init(k, (din, RANK), jnp.float32, 0.02)},
         "B": {"w": z((RANK, dout), jnp.float32)},
     }
-    return {"up": lora(ks[0], D, FF), "down": lora(ks[1], FF, D)}
+    return {
+        "base": {
+            "embed": L.embedding_init(ks[0], V, D, jnp.float32),
+            "up": L.linear_init(ks[1], D, FF, jnp.float32),
+            "down": L.linear_init(ks[2], FF, D, jnp.float32),
+            "head": L.linear_init(ks[3], D, V, jnp.float32),
+        },
+        "lora": {"up": lora(ks[4], D, FF), "down": lora(ks[5], FF, D)},
+    }
 
 
-def lora_linear(tape, name, frozen_w, lp, x, scale=2.0):
-    """x @ (W_frozen + A B * scale) with taps on both adapter matmuls."""
-    base = jnp.einsum("...d,dp->...p", x, frozen_w)
-    u = L.linear(tape, f"{name}/A", lp["A"], x)
-    v = L.linear(tape, f"{name}/B", lp["B"], u)
-    return base + scale * v
+def lora_linear(tape, name, base_p, lora_p, x, scale=2.0):
+    """x @ (W_base + A B * scale); base AND adapter matmuls are all tapped —
+    the policy decides which of them do DP book-keeping."""
+    with tape.scope("base"):
+        h = L.linear(tape, name, base_p, x)
+    with tape.scope("lora"):
+        u = L.linear(tape, f"{name}/A", lora_p["A"], x)
+        v = L.linear(tape, f"{name}/B", lora_p["B"], u)
+    return h + scale * v
 
 
-def make_apply(base):
-    def apply(lora_params, batch, tape: Tape):
-        x = jnp.take(base["embed"]["w"], batch["tokens"], axis=0)  # frozen
-        h = lora_linear(tape, "up", base["up"]["w"], lora_params["up"], x)
-        h = jax.nn.gelu(h)
-        h = lora_linear(tape, "down", base["down"]["w"], lora_params["down"], h)
-        logits = jnp.einsum("btd,dv->btv", x + h, base["head"]["w"])
-        return L.lm_per_sample_loss(logits[:, :-1], batch["tokens"][:, 1:])
+def apply_fn(params, batch, tape: Tape):
+    base, lora = params["base"], params["lora"]
+    with tape.scope("base"):
+        x = L.embedding(tape, "embed", base["embed"], batch["tokens"])
+    h = lora_linear(tape, "up", base["up"], lora["up"], x)
+    h = jax.nn.gelu(h)
+    h = lora_linear(tape, "down", base["down"], lora["down"], h)
+    with tape.scope("base"):
+        logits = L.linear(tape, "head", base["head"], x + h)
+    return L.lm_per_sample_loss(logits[:, :-1], batch["tokens"][:, 1:])
 
-    return apply
+
+POLICY = PrivacyPolicy(groups=(
+    # adapters: each matrix family group-wise clipped to its own R_g;
+    # sensitivity composes as sqrt(R_A^2 + R_B^2)
+    ParamGroup("lora_A", r"lora/.*/A/.*", R=0.7, scope="group"),
+    ParamGroup("lora_B", r"lora/.*/B/.*", R=0.7, scope="group"),
+    # frozen base: no taps, no norms, no noise — zero grads come back
+    ParamGroup("base", "base", trainable=False),
+), mode="bk", sigma=0.5)
 
 
 def main():
-    base = init_base(jax.random.PRNGKey(0))
-    lora = init_lora(jax.random.PRNGKey(1))
-    apply_fn = make_apply(base)
+    params = init_params(jax.random.PRNGKey(0))
     batch = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (B, T), 0, V)}
 
-    grad_fn = jax.jit(make_grad_fn(apply_fn, DPConfig(
-        mode="bk", clipping="automatic", sigma=0.5)))
-    # sanity: BK == Opacus on the adapter params
-    ref_fn = jax.jit(make_grad_fn(apply_fn, DPConfig(
-        mode="opacus", clipping="automatic", sigma=0.5)))
-    g1, a1 = grad_fn(lora, batch, jax.random.PRNGKey(3))
-    g2, a2 = ref_fn(lora, batch, jax.random.PRNGKey(3))
-    import numpy as np
-    np.testing.assert_allclose(a1["per_sample_norms"], a2["per_sample_norms"],
-                               rtol=1e-4)
-    print("DP-LoRA: BK == Opacus on adapters; norms",
-          np.asarray(a1["per_sample_norms"])[:4])
+    engine = PrivacyEngine(apply_fn, POLICY)
+    report = engine.kernel_report(params, batch)
+    assert not any(k.startswith("base/") for k in report), report
+    print(f"kernel_report taps (base frozen, adapters only): {sorted(report)}")
+
+    grad_fn = jax.jit(engine.grad)
+    # sanity: BK == Opacus under the SAME policy, and base grads are zero
+    import dataclasses
+    ref_fn = jax.jit(make_grad_fn(apply_fn,
+                                  dataclasses.replace(POLICY, mode="opacus")))
+    g1, a1 = grad_fn(params, batch, jax.random.PRNGKey(3))
+    g2, a2 = ref_fn(params, batch, jax.random.PRNGKey(3))
+    for gname in ("lora_A", "lora_B"):
+        np.testing.assert_allclose(a1["group_norms"][gname],
+                                   a2["group_norms"][gname], rtol=1e-4)
+    assert all(np.all(np.asarray(x) == 0)
+               for x in jax.tree_util.tree_leaves(g1["base"]))
+    print("DP-LoRA: BK == Opacus on adapters; zero base grads; group norms",
+          {k: np.asarray(v)[:2] for k, v in a1["group_norms"].items()})
 
     lr = 1e-2
     for step in range(10):
-        grads, aux = grad_fn(lora, batch, jax.random.fold_in(
-            jax.random.PRNGKey(4), step))
-        lora = jax.tree_util.tree_map(lambda p, g: p - lr * g, lora, grads)
+        grads, aux = grad_fn(params, batch,
+                             jax.random.fold_in(jax.random.PRNGKey(4), step))
+        params = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
         if step % 3 == 0:
             print(f"step {step}: loss {float(aux['loss']):.4f}")
-    print("OK — DP-LoRA fine-tuning with Book-Keeping.")
+    print("OK — DP-LoRA fine-tuning with a frozen-group PrivacyPolicy.")
 
 
 if __name__ == "__main__":

@@ -79,6 +79,15 @@ class TrainConfig:
     checkpoint_every: int = 0
     checkpoint_dir: str = ""
     keep_checkpoints: int = 3
+    # PrivacyPolicy preset name (configs.registry.get_policy):
+    #   ""     — flat single-group DP from the DPConfig alone
+    #   "auto" — use the arch's registered preset when one exists
+    #   other  — a specific registered preset
+    policy: str = "auto"
+    # measured kernel autotune at startup (kernels.dispatch.autotune):
+    #   "auto" — on for real accelerators, off on CPU (interpret mode)
+    #   "on" / "off"
+    autotune: str = "auto"
 
 
 @dataclass(frozen=True)

@@ -2,7 +2,8 @@
 expert d_ff=1408, 64 routed top-6 + 2 shared, first layer dense,
 vocab=102400."""
 from repro.configs.base import ModelConfig
-from repro.configs.registry import register
+from repro.configs.registry import register, register_policy
+from repro.core.policy import ParamGroup, PrivacyPolicy
 
 
 @register
@@ -13,3 +14,18 @@ def deepseek_moe_16b() -> ModelConfig:
         n_experts=64, top_k=6, n_shared=2, moe_d_ff=1408, first_k_dense=1, capacity_factor=1.25,
         renorm_topk=False, rope_theta=10000.0, norm="rmsnorm", act="swiglu",
         dtype="bfloat16", param_dtype="bfloat16", remat=True, attn_chunk=512)
+
+
+@register_policy("deepseek-moe-16b")
+def deepseek_moe_16b_policy() -> PrivacyPolicy:
+    """Group-wise clipping split along the model's natural axes: routed
+    expert weights (each sample touches top-k of 64, so per-sample expert
+    gradients are sparse and small-normed) get their own clipping unit and
+    threshold, the router its own (tiny but gradient-sensitive), everything
+    else (attention / shared-FFN / embeddings) forms the dense trunk unit.
+    Sensitivity composes as sqrt(R_experts^2 + R_router^2 + R_dense^2)."""
+    return PrivacyPolicy(groups=(
+        ParamGroup("experts", r".*/experts/.*", R=0.5, scope="group"),
+        ParamGroup("router", r".*/router/.*", R=0.25, scope="group"),
+        ParamGroup("dense", ".*", R=1.0, scope="group"),
+    ), mode="bk-mixopt")

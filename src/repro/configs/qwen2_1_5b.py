@@ -1,7 +1,8 @@
 """qwen2-1.5b [dense] — arXiv:2407.10671. 28L, d=1536, 12H GQA kv=2,
 d_ff=8960, vocab=151936, QKV bias."""
 from repro.configs.base import ModelConfig
-from repro.configs.registry import register
+from repro.configs.registry import register, register_policy
+from repro.core.policy import ParamGroup, PrivacyPolicy
 
 
 @register
@@ -11,3 +12,15 @@ def qwen2_1_5b() -> ModelConfig:
         n_heads=12, n_kv_heads=2, head_dim=128, d_ff=8960, vocab=151936,
         qkv_bias=True, rope_theta=1000000.0, norm="rmsnorm", act="swiglu",
         dtype="bfloat16", param_dtype="bfloat16", remat=True, attn_chunk=512)
+
+
+@register_policy("qwen2-1.5b")
+def qwen2_1_5b_policy() -> PrivacyPolicy:
+    """Embedding + LM head (the 151936-row vocab tables, whose per-sample
+    gradients are T-sparse and systematically smaller-normed than the dense
+    trunk's) clipped group-wise with their own R; transformer blocks form
+    the flat pool."""
+    return PrivacyPolicy(groups=(
+        ParamGroup("vocab", r"(embed|head)/.*", R=0.5, scope="group"),
+        ParamGroup("trunk", ".*", R=1.0, scope="flat"),
+    ), mode="bk-mixopt")

@@ -3,21 +3,56 @@
 Full configs match the assignment table exactly; ``smoke()`` returns a
 reduced same-family config for CPU tests. ``build(cfg)`` instantiates the
 right model class for the family.
+
+Arch modules may also register a named :class:`PrivacyPolicy` preset
+(``register_policy``) — the per-parameter-group DP recipe for that model
+(e.g. deepseek-moe-16b clips expert weights group-wise, separately from the
+dense trunk). ``get_policy(name, **overrides)`` materializes it with
+engine-level fields (mode / sigma / noise / use_kernels) replaced.
 """
 from __future__ import annotations
 
+import dataclasses
 import importlib
 from typing import Callable
 
 from repro.configs.base import ModelConfig
 
 _REGISTRY: dict = {}
+_POLICIES: dict = {}
 
 
 def register(fn: Callable[[], ModelConfig]):
     cfg = fn()
     _REGISTRY[cfg.name] = fn
     return fn
+
+
+def register_policy(name: str):
+    """Decorator: register ``fn() -> PrivacyPolicy`` as preset ``name``."""
+    def deco(fn):
+        _POLICIES[name] = fn
+        return fn
+    return deco
+
+
+def get_policy(name: str, **overrides):
+    """Named PrivacyPolicy preset, with engine-level field overrides
+    (mode=..., sigma=..., noise=..., use_kernels=...)."""
+    try:
+        policy = _POLICIES[name]()
+    except KeyError:
+        raise KeyError(f"no policy preset for {name!r}; known: "
+                       f"{sorted(_POLICIES)}")
+    return dataclasses.replace(policy, **overrides) if overrides else policy
+
+
+def has_policy(name: str) -> bool:
+    return name in _POLICIES
+
+
+def list_policies():
+    return sorted(_POLICIES)
 
 
 def get_config(name: str) -> ModelConfig:

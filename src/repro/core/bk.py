@@ -32,7 +32,8 @@ import jax.numpy as jnp
 
 from repro.core import ghost
 from repro.core.clipping import get_clip_fn
-from repro.core.noise import add_noise
+from repro.core.policy import (as_policy, finalize_noise, norm_aux,
+                               resolve_policy, unit_clip_factors)
 from repro.core.tape import Tape, parse_key
 from repro.utils.tree import flatten, unflatten
 
@@ -89,20 +90,21 @@ def split_param_paths(params, tap_struct):
 
 
 # ------------------------------------------------------------- norm dispatch
-def record_sq_norm(key: str, act, ds, mode: str, use_kernels: bool):
+def record_sq_norm(key: str, act, ds, mode: str, use_kernels: bool,
+                   method: str = ""):
     """Per-sample squared norm for one tapped op.
 
     Every kind routes through kernels.dispatch: the plan fixes ghost-vs-direct
-    (the paper's layerwise rule; mode 'bk' forces ghost) and, when
-    ``use_kernels``, whether the fused Pallas kernel or the jnp einsum runs
-    plus its block sizes. Returns (sq_norms (B,), cached) where cached
-    optionally carries the instantiated per-sample grads for mixopt reuse in
-    phase 3.
+    (the paper's layerwise rule; mode 'bk' forces ghost; a ParamGroup's
+    ``method`` override wins over both) and, when ``use_kernels``, whether the
+    fused Pallas kernel or the jnp einsum runs plus its block sizes. Returns
+    (sq_norms (B,), cached) where cached optionally carries the instantiated
+    per-sample grads for mixopt reuse in phase 3.
     """
     from repro.kernels import dispatch
     _, kind, _ = parse_key(key)
     if kind == "mm":
-        plan = dispatch.norm_plan("mm", act.shape, ds.shape, mode)
+        plan = dispatch.norm_plan("mm", act.shape, ds.shape, mode, method)
         fused = use_kernels and plan.impl == "kernel"
         if plan.method == "ghost":
             if fused:
@@ -127,13 +129,14 @@ def record_sq_norm(key: str, act, ds, mode: str, use_kernels: bool):
             return kops.direct_norm_mm(act, ds, **plan.kwargs()), None
         return ghost.sq_norm_mm_direct(act, ds), None
     if kind == "emb":
-        plan = dispatch.norm_plan("emb", act.shape, ds.shape, mode)
+        plan = dispatch.norm_plan("emb", act.shape, ds.shape, mode, method)
         if use_kernels and plan.impl == "kernel":
             from repro.kernels import ops as kops
             return kops.ghost_norm_emb(act, ds, **plan.kwargs()), None
         return ghost.sq_norm_emb(act, ds), None
     if kind == "moe":
-        plan = dispatch.norm_plan("moe", act["a"].shape, ds.shape, mode)
+        plan = dispatch.norm_plan("moe", act["a"].shape, ds.shape, mode,
+                                  method)
         fused = use_kernels and plan.impl == "kernel"
         if plan.method == "ghost":
             if fused:
@@ -181,12 +184,15 @@ def record_weighted_grad(key: str, act, ds, C, cached, use_kernels: bool,
     raise ValueError(f"unknown tap kind in key {key!r}")
 
 
-def plan_report(apply_fn, params, batch, cfg: DPConfig) -> dict:
+def plan_report(apply_fn, params, batch, cfg) -> dict:
     """Resolved kernel-dispatch plans per tap, from one free eval_shape pass.
 
     -> {tap_key: {'norm': Plan, 'grad': Plan}} — observability for the
-    engine/benchmarks; no compute."""
+    engine/benchmarks; no compute. Policy-aware: frozen-group taps are
+    absent from the report (they emit no norm/grad work at all) and
+    per-group method overrides show up in the norm plan."""
     from repro.kernels import dispatch
+    policy = as_policy(cfg)
 
     def shape_run(p, b):
         tape = Tape(None)
@@ -195,38 +201,54 @@ def plan_report(apply_fn, params, batch, cfg: DPConfig) -> dict:
 
     taps, acts = jax.eval_shape(shape_run, params, batch)
     flat_params = flatten(params)
+    res = resolve_policy(policy, flat_params)
     report = {}
     for key in sorted(acts):
         path, kind, _ = parse_key(key)
+        wpath = path + "/w"
+        if wpath in res.frozen:
+            continue
         a_shape = acts[key]["a"].shape if kind == "moe" else acts[key].shape
-        vocab = flat_params[path + "/w"].shape[-2] if kind == "emb" else 0
+        vocab = flat_params[wpath].shape[-2] if kind == "emb" else 0
         plans = {
             "norm": dispatch.norm_plan(kind, a_shape, taps[key].shape,
-                                       cfg.mode),
+                                       policy.mode, res.method_for(wpath)),
             "grad": dispatch.grad_plan(kind, a_shape, taps[key].shape, vocab),
         }
-        if not cfg.use_kernels:  # report what will actually run
+        if not policy.use_kernels:  # report what will actually run
             plans = {k: replace(p, impl="jnp") for k, p in plans.items()}
         report[key] = plans
     return report
 
 
 # ------------------------------------------------------------------- BK core
-def bk_clipped_sum(apply_fn, params, batch, cfg: DPConfig):
+def bk_clipped_sum(apply_fn, params, batch, cfg):
     """Phases 1-3 of BK: the pre-noise clipped gradient SUM (flat dict).
+
+    ``cfg`` is a DPConfig or PrivacyPolicy; each clipping unit of the
+    resolved policy gets its own per-sample norm accumulator and clip factor
+    C_i^(u), frozen-group taps/params are skipped outright (no cotangent is
+    even requested — XLA never builds their book-keeping), and their grads
+    come back as zeros.
 
     This is the accumulation unit for the physical/logical batch split
     (paper footnote 2): sum over microbatches, then noise ONCE per logical
     batch. Returns (flat_sums, aux)."""
-    assert cfg.mode in BK_MODES, cfg.mode
+    policy = as_policy(cfg)
+    assert policy.mode in BK_MODES, policy.mode
     B = batch_size_of(batch)
     flat_params = flatten(params)
     tap_struct = tap_structs(apply_fn, params, batch)
     _, psp_paths = split_param_paths(params, tap_struct)
+    res = resolve_policy(policy, flat_params)
 
-    taps0 = {k: jnp.zeros(v.shape, v.dtype) for k, v in tap_struct.items()}
+    active_taps = sorted(k for k in tap_struct
+                         if parse_key(k)[0] + "/w" not in res.frozen)
+    psp_active = [p for p in psp_paths if p not in res.frozen]
+    taps0 = {k: jnp.zeros(tap_struct[k].shape, tap_struct[k].dtype)
+             for k in active_taps}
     psp0 = {p: jnp.broadcast_to(flat_params[p], (B,) + flat_params[p].shape)
-            for p in psp_paths}
+            for p in psp_active}
 
     # ---- phase 1: one forward + one output-gradient-only backward ----------
     def run(taps, psp):
@@ -239,45 +261,54 @@ def bk_clipped_sum(apply_fn, params, batch, cfg: DPConfig):
     loss_sum, vjp_fn, (losses, acts) = jax.vjp(run, taps0, psp0, has_aux=True)
     ds_taps, g_psp = vjp_fn(jnp.ones_like(loss_sum))
 
-    # ---- phase 2: per-sample norms + clip factors ---------------------------
-    sq = jnp.zeros((B,), F32)
+    # ---- phase 2: per-unit per-sample norms + clip factors ------------------
+    unit_of = lambda p: res.unit_of[p]
+    sq = [jnp.zeros((B,), F32) for _ in res.units]
     cache = {}
-    for key in sorted(acts):
-        nk, cached = record_sq_norm(key, acts[key], ds_taps[key], cfg.mode,
-                                    cfg.use_kernels)
+    for key in active_taps:
+        wpath = parse_key(key)[0] + "/w"
+        nk, cached = record_sq_norm(key, acts[key], ds_taps[key], policy.mode,
+                                    policy.use_kernels,
+                                    res.method_for(wpath))
         cache[key] = cached
-        sq = sq + nk
-    for p in psp_paths:
+        u = unit_of(wpath)
+        sq[u] = sq[u] + nk
+    for p in psp_active:
         g = g_psp[p].astype(F32)
-        sq = sq + jnp.sum(g * g, axis=tuple(range(1, g.ndim)))
-    norms = jnp.sqrt(sq)
-    C = cfg.clip_fn()(norms).astype(F32)
+        u = unit_of(p)
+        sq[u] = sq[u] + jnp.sum(g * g, axis=tuple(range(1, g.ndim)))
+    unit_norms, unit_C = unit_clip_factors(res, sq)
 
     # ---- phase 3: weighted gradients ----------------------------------------
     flat_grads = {}
-    for key in sorted(acts):
+    for key in active_taps:
         path, kind, _ = parse_key(key)
         wpath = path + "/w"
         w = flat_params[wpath]
         vocab = w.shape[-2] if kind == "emb" else 0
         flat_grads[wpath] = record_weighted_grad(
-            key, acts[key], ds_taps[key], C, cache[key], cfg.use_kernels,
-            w.dtype, vocab)
-    for p in psp_paths:
+            key, acts[key], ds_taps[key], unit_C[unit_of(wpath)], cache[key],
+            policy.use_kernels, w.dtype, vocab)
+    for p in psp_active:
         g = g_psp[p]
         flat_grads[p] = jnp.einsum("b...,b->...", g.astype(F32),
-                                   C).astype(flat_params[p].dtype)
+                                   unit_C[unit_of(p)]).astype(
+                                       flat_params[p].dtype)
+    for p in res.frozen:
+        flat_grads[p] = jnp.zeros_like(flat_params[p])
 
-    aux = {"loss": jnp.mean(losses), "per_sample_norms": norms,
-           "clip_factors": C}
-    return flat_grads, aux
+    return flat_grads, norm_aux(res, losses, sq, unit_norms, unit_C)
 
 
-def bk_private_grad(apply_fn, params, batch, rng, cfg: DPConfig):
+def bk_private_grad(apply_fn, params, batch, rng, cfg, step=None):
     """Private gradient via Book-Keeping: clipped sum + noise + 1/B scale.
-    Returns (grads matching the params tree, aux)."""
+    ``step`` feeds stateful noise mechanisms (tree aggregation raises when it
+    is omitted); the default Gaussian ignores it. Returns (grads matching the
+    params tree, aux)."""
+    policy = as_policy(cfg)
     B = batch_size_of(batch)
-    flat_sums, aux = bk_clipped_sum(apply_fn, params, batch, cfg)
-    # ---- phase 4: noise + scale ---------------------------------------------
-    flat_grads = add_noise(flat_sums, rng, cfg.sigma, cfg.R, float(B))
+    flat_sums, aux = bk_clipped_sum(apply_fn, params, batch, policy)
+    # ---- phase 4: noise (sigma * composed sensitivity) + scale --------------
+    res = resolve_policy(policy, flatten(params))
+    flat_grads = finalize_noise(policy, res, flat_sums, rng, float(B), step)
     return unflatten(flat_grads), aux

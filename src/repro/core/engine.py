@@ -6,6 +6,15 @@ drop-in gradient function with the same signature as non-private training:
     engine = PrivacyEngine(model.apply, DPConfig(mode="bk-mixopt", sigma=...))
     grads, aux = engine.grad(params, batch, rng)
 
+or hand it a :class:`repro.core.policy.PrivacyPolicy` for per-parameter-group
+DP (group-wise clipping, frozen groups, pluggable noise):
+
+    policy = PrivacyPolicy(groups=(
+        ParamGroup("adapters", r".*lora.*", R=1.0, scope="group"),
+        ParamGroup("base", ".*", trainable=False),
+    ), mode="bk", sigma=0.5)
+    engine = PrivacyEngine(model.apply, policy)
+
 Modes: 'nonprivate' | 'tfprivacy' | 'opacus' | 'fastgradclip' | 'ghostclip'
      | 'bk' | 'bk-mixghost' | 'bk-mixopt'
 """
@@ -17,6 +26,7 @@ from typing import Callable
 from repro.core import baselines
 from repro.core.accounting import budget_for
 from repro.core.bk import BK_MODES, DPConfig, bk_private_grad, plan_report
+from repro.core.policy import ParamGroup, PrivacyPolicy, as_policy
 
 _BASELINES = {
     "nonprivate": baselines.nonprivate_grad,
@@ -29,20 +39,26 @@ _BASELINES = {
 ALL_MODES = tuple(_BASELINES) + BK_MODES
 
 
-def make_grad_fn(apply_fn: Callable, cfg: DPConfig) -> Callable:
-    """-> fn(params, batch, rng) -> (grads, aux). Pure; jit/pjit it freely."""
-    if cfg.mode in BK_MODES:
-        return lambda params, batch, rng: bk_private_grad(apply_fn, params, batch, rng, cfg)
-    if cfg.mode in _BASELINES:
-        fn = _BASELINES[cfg.mode]
-        return lambda params, batch, rng: fn(apply_fn, params, batch, rng, cfg)
-    raise ValueError(f"unknown mode {cfg.mode!r}; options: {ALL_MODES}")
+def make_grad_fn(apply_fn: Callable, cfg) -> Callable:
+    """-> fn(params, batch, rng, step=None) -> (grads, aux). Pure; jit/pjit it
+    freely (``step`` only matters to stateful noise mechanisms such as tree
+    aggregation; it may be a traced scalar). ``cfg`` is a DPConfig or a
+    PrivacyPolicy."""
+    policy = as_policy(cfg)
+    if policy.mode in BK_MODES:
+        return lambda params, batch, rng, step=None: bk_private_grad(
+            apply_fn, params, batch, rng, policy, step)
+    if policy.mode in _BASELINES:
+        fn = _BASELINES[policy.mode]
+        return lambda params, batch, rng, step=None: fn(
+            apply_fn, params, batch, rng, policy, step)
+    raise ValueError(f"unknown mode {policy.mode!r}; options: {ALL_MODES}")
 
 
 class PrivacyEngine:
     """Stateful convenience wrapper (accounting + grad fn)."""
 
-    def __init__(self, apply_fn: Callable, cfg: DPConfig,
+    def __init__(self, apply_fn: Callable, cfg,
                  batch_size: int = 0, dataset_size: int = 0,
                  epochs: float = 0.0, target_epsilon: float = 0.0,
                  delta: float = 1e-5):
@@ -54,6 +70,7 @@ class PrivacyEngine:
         else:
             self.budget = None
         self.cfg = cfg
+        self.policy = as_policy(cfg)
         self.apply_fn = apply_fn
         self.grad = make_grad_fn(apply_fn, cfg)
 
@@ -61,5 +78,6 @@ class PrivacyEngine:
         """Per-tap kernel dispatch plans (impl/method/blocks) for this model
         and batch shape — one free eval_shape pass, no compute. Lets users
         see (and log) what ``use_kernels`` will actually run before training.
+        Frozen-group taps are absent (they do no norm/grad work at all).
         """
         return plan_report(self.apply_fn, params, batch, self.cfg)

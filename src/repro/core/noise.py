@@ -1,7 +1,24 @@
-"""DP Gaussian noise addition.
+"""DP noise mechanisms (pluggable via PrivacyPolicy.noise).
 
 ``add_noise`` draws per-leaf Gaussian noise with a path-stable RNG split so
 the noise is reproducible per parameter regardless of tree iteration order.
+
+A ``NoiseMechanism`` is any object with
+
+    add(flat_grads, rng, sigma, sensitivity, denom, step=None) -> dict
+
+returning ``(G + sigma * sensitivity * xi) / denom`` per leaf, where
+``sensitivity`` is the policy's composed L2 sensitivity (a bare R for flat
+clipping). Two are registered:
+
+  'gaussian'  the classic Gaussian mechanism (per-step independent noise)
+  'tree'      binary-tree aggregation (Kairouz et al. 2021, DP-FTRL): the
+              CUMULATIVE noise over steps 1..t is the sum of the O(log t)
+              tree-node noises covering [1..t]; ``add`` injects the per-step
+              increment N(t) - N(t-1) so the optimizer's running gradient
+              sum carries exactly N(t). Node noise is keyed by a fixed seed
+              (NOT the per-step rng) so node draws are shared across steps
+              and the increments telescope.
 
 ``partial_sigma`` implements the distributed-noise trick: on an n-way data
 axis each shard adds N(0, (sigma/sqrt(n))^2) *before* the gradient
@@ -34,3 +51,94 @@ def add_noise(flat_grads: dict, rng, sigma: float, R: float, denom: float) -> di
 
 def partial_sigma(sigma: float, n_shards: int) -> float:
     return sigma / (n_shards ** 0.5)
+
+
+# ----------------------------------------------------------------- mechanisms
+class GaussianMechanism:
+    """Per-step independent Gaussian noise — the DP-SGD default."""
+    name = "gaussian"
+
+    def __init__(self, seed: int = 0, depth: int = 0):
+        del seed, depth  # stateless: noise comes from the per-step rng
+
+    def add(self, flat_grads: dict, rng, sigma: float, sensitivity: float,
+            denom: float, step=None) -> dict:
+        del step  # per-step independence: the per-call rng is the state
+        return add_noise(flat_grads, rng, sigma, sensitivity, denom)
+
+
+class TreeAggregationMechanism:
+    """Binary-tree aggregated noise (DP-FTRL).
+
+    Node (level l, index i>=1) covers steps [(i-1)*2^l + 1, i*2^l]. At step t
+    (1-indexed) the prefix [1..t] is covered by one node per set bit b of t,
+    with index i = t >> b — so the cumulative noise N(t) sums popcount(t)
+    unit-variance node draws, giving per-coordinate variance
+    popcount(t) * (sigma * sensitivity)^2 <= (log2(t)+1) * (sigma * S)^2
+    instead of the t * (sigma * S)^2 of per-step independent noise on a
+    released prefix sum.
+
+    The per-call ``rng`` is IGNORED: node noises must be identical whenever
+    the same node covers different prefixes, so they key off the fixed
+    ``seed`` + (path, level, index) only. ``step`` may be a python int or a
+    traced jnp scalar (the node indices are data to ``fold_in``).
+
+    Cost note: with a traced step every level draws a full leaf-sized normal
+    (the dead levels' zero weights can't be DCE'd), i.e. 2*depth draws per
+    leaf per ``add``. ``depth`` only needs to cover the horizon
+    (2^depth - 1 steps) — set ``PrivacyPolicy.noise_depth`` to
+    ceil(log2(steps + 1)) to pay only what the run needs.
+    """
+    name = "tree"
+
+    def __init__(self, seed: int = 0, depth: int = 30):
+        self.seed = seed
+        self.depth = depth           # supports up to 2^depth - 1 steps
+
+    def _node(self, path: str, level: int, idx):
+        k = _path_rng(jax.random.PRNGKey(self.seed), path)
+        return jax.random.fold_in(jax.random.fold_in(k, level), idx)
+
+    def prefix_noise(self, path: str, shape, t, dtype=jnp.float32):
+        """N(t): unit-variance-per-node cumulative noise for steps [1..t]."""
+        out = jnp.zeros(shape, dtype)
+        for b in range(self.depth):
+            i = t >> b
+            z = jax.random.normal(self._node(path, b, i), shape, dtype)
+            out = out + jnp.asarray(i & 1, dtype) * z
+        return out
+
+    def add(self, flat_grads: dict, rng, sigma: float, sensitivity: float,
+            denom: float, step=None) -> dict:
+        del rng
+        if sigma > 0.0 and step is None:
+            # a forgotten step would re-add the IDENTICAL N(1)-N(0) draw
+            # every call — differences of released grads become noise-free.
+            # Fail loudly instead of silently voiding the guarantee.
+            raise ValueError(
+                "tree aggregation is stateful: pass the step index — "
+                "grad_fn(params, batch, rng, step) / engine.grad(..., step)")
+        t = (step if step is not None else 0) + 1  # steps are 0-indexed
+        out = {}
+        for path, g in flat_grads.items():
+            if sigma > 0.0:
+                delta = (self.prefix_noise(path, g.shape, t)
+                         - self.prefix_noise(path, g.shape, t - 1))
+                g = g + (sigma * sensitivity) * delta.astype(g.dtype)
+            out[path] = g / denom
+        return out
+
+
+NOISE_MECHANISMS = {
+    "gaussian": GaussianMechanism,
+    "tree": TreeAggregationMechanism,
+}
+
+
+def get_mechanism(name: str, seed: int = 0, depth: int = 0):
+    try:
+        cls = NOISE_MECHANISMS[name]
+    except KeyError:
+        raise ValueError(f"unknown noise mechanism {name!r}; options: "
+                         f"{sorted(NOISE_MECHANISMS)}")
+    return cls(seed=seed, depth=depth) if depth else cls(seed=seed)

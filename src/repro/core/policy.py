@@ -1,0 +1,238 @@
+"""PrivacyPolicy: the per-parameter-group DP API.
+
+A policy is an ordered list of :class:`ParamGroup` rules matched against the
+flattened param tree (first match wins). Each group carries its own clipping
+fn + threshold R, a norm *scope*, an optional ghost-vs-direct override for
+``kernels.dispatch``, and a trainable flag:
+
+  scope='flat'   the group joins the shared flat pool: ONE per-sample norm
+                 over every flat-scope param, one clip factor (classic
+                 Abadi-style clipping; all flat groups must agree on
+                 clipping/R/gamma).
+  scope='group'  the group is its own clipping unit: its own per-sample norm
+                 ||g_i^(g)||, its own C_i^(g) = clip(||g_i^(g)||; R_g)
+                 (group-wise clipping, He et al. 2022 / Bu et al. 2023).
+  trainable=False
+                 the LoRA fast path: the group's params are closed over as
+                 constants — no tap differentiation, no norm, no weighted
+                 grad, no noise; grads come back as zeros.
+
+The L2 sensitivity of one sample's clipped contribution composes as
+sqrt(R_flat^2 + sum_g R_g^2) over the non-empty trainable units
+(``accounting.compose_sensitivity``); the noise mechanism scales by that
+instead of a bare R.
+
+A bare :class:`repro.core.bk.DPConfig` lowers to a single-group flat policy
+via :func:`as_policy`, so every pre-policy call site runs unchanged.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Callable
+
+import jax.numpy as jnp
+
+from repro.core.accounting import compose_sensitivity
+from repro.core.clipping import get_clip_fn
+
+SCOPES = ("flat", "group")
+METHODS = ("", "ghost", "direct")
+
+
+@dataclass(frozen=True)
+class ParamGroup:
+    """One ordered matching rule over flattened param paths."""
+    name: str
+    match: str                       # path prefix, or regex (fullmatch)
+    clipping: str = "automatic"      # clipping fn name (core.clipping)
+    R: float = 1.0                   # per-group clipping threshold R_g
+    scope: str = "flat"              # 'flat' | 'group' (norm scope)
+    gamma: float = 0.01              # automatic-clipping stability constant
+    trainable: bool = True           # False = frozen (no taps / grads / noise)
+    method: str = ""                 # '' | 'ghost' | 'direct' dispatch override
+
+    def __post_init__(self):
+        if self.scope not in SCOPES:
+            raise ValueError(f"group {self.name!r}: scope must be one of "
+                             f"{SCOPES}, got {self.scope!r}")
+        if self.method not in METHODS:
+            raise ValueError(f"group {self.name!r}: method must be one of "
+                             f"{METHODS}, got {self.method!r}")
+
+    def matches(self, path: str) -> bool:
+        if path == self.match or path.startswith(self.match + "/"):
+            return True
+        try:
+            return re.fullmatch(self.match, path) is not None
+        except re.error:
+            return False
+
+    def clip_fn(self) -> Callable:
+        kw = {"gamma": self.gamma} if self.clipping == "automatic" else {}
+        return get_clip_fn(self.clipping, self.R, **kw)
+
+
+@dataclass(frozen=True)
+class PrivacyPolicy:
+    """Ordered ParamGroup rules + the engine-level knobs DPConfig used to own."""
+    groups: tuple                    # tuple[ParamGroup, ...], first match wins
+    mode: str = "bk"                 # implementation (BK_MODES + baselines)
+    sigma: float = 0.0               # noise multiplier (0 = clipping only)
+    noise: str = "gaussian"          # NoiseMechanism name (core.noise)
+    noise_seed: int = 0              # node-noise seed for stateful mechanisms
+    noise_depth: int = 0             # tree depth (0 = mechanism default; set
+                                     # ceil(log2(steps+1)) to cut draw cost)
+    use_kernels: bool = True         # fused Pallas kernels via kernels.dispatch
+
+    def __post_init__(self):
+        if not self.groups:
+            raise ValueError("policy needs at least one ParamGroup")
+        names = [g.name for g in self.groups]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate group names: {names}")
+
+    def mechanism(self):
+        from repro.core.noise import get_mechanism
+        return get_mechanism(self.noise, seed=self.noise_seed,
+                             depth=self.noise_depth)
+
+    def group_for(self, path: str) -> ParamGroup:
+        for g in self.groups:
+            if g.matches(path):
+                return g
+        raise ValueError(f"param {path!r} matched no policy group")
+
+
+def as_policy(cfg) -> PrivacyPolicy:
+    """DPConfig -> equivalent single-group flat policy; policies pass through."""
+    if isinstance(cfg, PrivacyPolicy):
+        return cfg
+    return PrivacyPolicy(
+        groups=(ParamGroup("all", ".*", clipping=cfg.clipping, R=cfg.R,
+                           scope="flat", gamma=cfg.gamma),),
+        mode=cfg.mode, sigma=cfg.sigma,
+        use_kernels=cfg.use_kernels)
+
+
+# ------------------------------------------------------------------ resolution
+@dataclass(frozen=True)
+class ClipUnit:
+    """One clipping unit: a per-sample norm accumulator + clip factor C_i."""
+    name: str
+    clipping: str
+    R: float
+    gamma: float
+    paths: tuple                     # member param paths (sorted)
+
+    def clip_fn(self) -> Callable:
+        kw = {"gamma": self.gamma} if self.clipping == "automatic" else {}
+        return get_clip_fn(self.clipping, self.R, **kw)
+
+
+@dataclass(frozen=True)
+class ResolvedPolicy:
+    """A policy bound to a concrete param tree (pure-python, config time)."""
+    policy: PrivacyPolicy
+    units: tuple                     # tuple[ClipUnit, ...]
+    unit_of: dict                    # path -> unit index (trainable paths only)
+    group_of: dict                   # path -> ParamGroup (every path)
+    frozen: frozenset                # paths of non-trainable groups
+    sensitivity: float               # sqrt(sum_u R_u^2) over non-empty units
+
+    def method_for(self, path: str) -> str:
+        return self.group_of[path].method
+
+
+def resolve_policy(policy: PrivacyPolicy, param_paths) -> ResolvedPolicy:
+    """Bind a policy to the flattened param paths.
+
+    The ordered groups must form a true partition: every path matches at
+    least one group (first match claims it); unmatched paths raise.
+    """
+    param_paths = sorted(param_paths)
+    group_of, members = {}, {g.name: [] for g in policy.groups}
+    unmatched = []
+    for path in param_paths:
+        for g in policy.groups:
+            if g.matches(path):
+                group_of[path] = g
+                members[g.name].append(path)
+                break
+        else:
+            unmatched.append(path)
+    if unmatched:
+        raise ValueError(
+            "params matched no policy group (add a catch-all rule such as "
+            f"ParamGroup('rest', '.*')): {unmatched}")
+
+    flat_groups = [g for g in policy.groups
+                   if g.trainable and g.scope == "flat" and members[g.name]]
+    for g in flat_groups[1:]:
+        ref = flat_groups[0]
+        if (g.clipping, g.R, g.gamma) != (ref.clipping, ref.R, ref.gamma):
+            raise ValueError(
+                "flat-scope groups share ONE norm pool and so must agree on "
+                f"(clipping, R, gamma): {ref.name!r} has "
+                f"{(ref.clipping, ref.R, ref.gamma)}, {g.name!r} has "
+                f"{(g.clipping, g.R, g.gamma)}")
+
+    units, unit_of = [], {}
+    if flat_groups:
+        ref = flat_groups[0]
+        paths = sorted(p for g in flat_groups for p in members[g.name])
+        name = ref.name if len(flat_groups) == 1 else "flat"
+        units.append(ClipUnit(name, ref.clipping, ref.R, ref.gamma,
+                              tuple(paths)))
+        for p in paths:
+            unit_of[p] = 0
+    for g in policy.groups:
+        if g.trainable and g.scope == "group" and members[g.name]:
+            units.append(ClipUnit(g.name, g.clipping, g.R, g.gamma,
+                                  tuple(members[g.name])))
+            for p in members[g.name]:
+                unit_of[p] = len(units) - 1
+
+    frozen = frozenset(p for p in param_paths if not group_of[p].trainable)
+    return ResolvedPolicy(policy=policy, units=tuple(units), unit_of=unit_of,
+                          group_of=group_of, frozen=frozen,
+                          sensitivity=compose_sensitivity(
+                              [u.R for u in units]))
+
+
+def unit_clip_factors(res: ResolvedPolicy, sq):
+    """Per-unit per-sample sq norms -> ([norms_u], [C_u]) — phase 2's tail,
+    shared by every implementation."""
+    norms = [jnp.sqrt(s) for s in sq]
+    C = [unit.clip_fn()(n).astype(jnp.float32)
+         for unit, n in zip(res.units, norms)]
+    return norms, C
+
+
+def norm_aux(res: ResolvedPolicy, losses, sq, unit_norms, unit_C) -> dict:
+    """The aux dict every mode returns. ``per_sample_norms`` is the total
+    norm across units; single-unit policies additionally keep the pre-policy
+    ``clip_factors`` contract."""
+    aux = {"loss": jnp.mean(losses),
+           "per_sample_norms": (unit_norms[0] if len(res.units) == 1
+                                else jnp.sqrt(sum(sq))),
+           "group_norms": {u.name: n for u, n in zip(res.units, unit_norms)},
+           "group_clip_factors": {u.name: c
+                                  for u, c in zip(res.units, unit_C)}}
+    if len(res.units) == 1:
+        aux["clip_factors"] = unit_C[0]
+    return aux
+
+
+def finalize_noise(policy: PrivacyPolicy, res: ResolvedPolicy,
+                   flat_sums: dict, rng, denom: float, step=None) -> dict:
+    """Phase 4 shared by every implementation: the policy's noise mechanism
+    over the trainable leaves (sigma * sensitivity scale), frozen leaves pass
+    through untouched (they are zeros)."""
+    active = {p: g for p, g in flat_sums.items() if p not in res.frozen}
+    out = policy.mechanism().add(active, rng, policy.sigma, res.sensitivity,
+                                 denom, step=step)
+    for p, g in flat_sums.items():
+        if p in res.frozen:
+            out[p] = g
+    return out

@@ -68,7 +68,9 @@ class Tape:
     # ------------------------------------------------------------------- taps
     def _apply_tap(self, key: str, s: jnp.ndarray) -> jnp.ndarray:
         self.tap_zeros[key] = jnp.zeros_like(s)
-        if self.taps is not None:
+        # a key absent from a non-None taps dict is a frozen-group op (the
+        # policy dropped it from differentiation): pass through untapped
+        if self.taps is not None and key in self.taps:
             s = s + self.taps[key]
         return s
 

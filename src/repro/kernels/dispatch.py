@@ -126,9 +126,15 @@ def _cached(key, mk_plan):
 
 
 # ------------------------------------------------------------------- plans
-def norm_plan(kind: str, act_shape, ds_shape, mode: str) -> Plan:
-    """Per-tap plan for the phase-2 per-sample squared norm."""
-    key = ("norm", kind, tuple(act_shape), tuple(ds_shape), mode, backend())
+def norm_plan(kind: str, act_shape, ds_shape, mode: str,
+              method: str = "") -> Plan:
+    """Per-tap plan for the phase-2 per-sample squared norm.
+
+    ``method`` ('ghost' | 'direct') is the per-ParamGroup override from the
+    privacy policy: when set it wins over both the mode-'bk' forced-ghost
+    rule and the layerwise 2T^2-vs-pd heuristic."""
+    key = ("norm", kind, tuple(act_shape), tuple(ds_shape), mode, method,
+           backend())
 
     def mk():
         if kind == "mm":
@@ -136,19 +142,19 @@ def norm_plan(kind: str, act_shape, ds_shape, mode: str) -> Plan:
             L, B, T, d = a
             p = ds_shape[-1]
             from repro.core.ghost import prefer_ghost
-            method = "ghost" if mode == "bk" or prefer_ghost(T, d, p) \
-                else "direct"
-            inter = L * B * (2 * T * T if method == "ghost" else d * p)
+            m = method or ("ghost" if mode == "bk" or prefer_ghost(T, d, p)
+                           else "direct")
+            inter = L * B * (2 * T * T if m == "ghost" else d * p)
             blocks = (("block_t", block_t_ghost(T, d, p)),) \
-                if method == "ghost" else \
+                if m == "ghost" else \
                 tuple(zip(("block_d", "block_p"), block_dp(T, d, p)))
-            return Plan(_impl(inter), method, blocks)
+            return Plan(_impl(inter), m, blocks)
         if kind == "emb":
             ids = act_shape if len(act_shape) == 3 else (1,) + tuple(act_shape)
             L, B, T = ids
             d = ds_shape[-1]
             # ghost is the only sane norm for embeddings: direct would
-            # instantiate (B, V, d)
+            # instantiate (B, V, d); a 'direct' group override is ignored
             return Plan(_impl(L * B * T * T), "ghost",
                         (("block_t", block_t_ghost(T, d, d)),))
         if kind == "moe":
@@ -156,12 +162,12 @@ def norm_plan(kind: str, act_shape, ds_shape, mode: str) -> Plan:
             L, B, E, C, d = a
             p = ds_shape[-1]
             from repro.core.ghost import prefer_ghost
-            method = "ghost" if mode == "bk" or prefer_ghost(C, d, p) \
-                else "direct"
-            inter = L * B * E * (2 * C * C if method == "ghost" else d * p)
-            blocks = () if method == "ghost" else \
+            m = method or ("ghost" if mode == "bk" or prefer_ghost(C, d, p)
+                           else "direct")
+            inter = L * B * E * (2 * C * C if m == "ghost" else d * p)
+            blocks = () if m == "ghost" else \
                 tuple(zip(("block_d", "block_p"), block_dp(C, d, p)))
-            return Plan(_impl(inter), method, blocks)
+            return Plan(_impl(inter), m, blocks)
         raise ValueError(f"unknown tap kind {kind!r}")
 
     return _cached(key, mk)
@@ -227,11 +233,13 @@ def autotune(run_fn, candidates, *args) -> tuple:
 
 
 def override_blocks(key_prefix: str, kind: str, act_shape, ds_shape,
-                    blocks: tuple, mode: str = "bk", vocab: int = 0) -> None:
+                    blocks: tuple, mode: str = "bk", vocab: int = 0,
+                    method: str = "") -> None:
     """Pin measured blocks for one (kind, shape): subsequent plans use them."""
     if key_prefix == "norm":
-        plan = norm_plan(kind, act_shape, ds_shape, mode)
-        key = ("norm", kind, tuple(act_shape), tuple(ds_shape), mode, backend())
+        plan = norm_plan(kind, act_shape, ds_shape, mode, method)
+        key = ("norm", kind, tuple(act_shape), tuple(ds_shape), mode, method,
+               backend())
     else:
         plan = grad_plan(kind, act_shape, ds_shape, vocab)
         key = ("grad", kind, tuple(act_shape), tuple(ds_shape), vocab, backend())

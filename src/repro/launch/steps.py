@@ -61,7 +61,7 @@ class CellPlan:
                 mesh = sh.mesh
                 break
         if mesh is not None:
-            with jax.set_mesh(mesh):
+            with mesh:  # Mesh is the context manager (jax.set_mesh is newer)
                 return self.jitted().lower(*self.args)
         return self.jitted().lower(*self.args)
 

@@ -4,11 +4,20 @@ optimizer -> checkpoint/restart, with preemption + heartbeat guards.
     PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --smoke \
         --steps 50 --batch 8 --seq 64 --epsilon 3.0
 
+Accepts a bare DPConfig or a named PrivacyPolicy preset (``--policy``; the
+default 'auto' picks the arch's registered preset when one exists, e.g.
+deepseek-moe-16b's expert/router/dense group-wise split). Before the first
+step the driver can autotune the fused-kernel block sizes for the model's
+actual tap shapes (``--autotune``, measured via kernels.dispatch.autotune and
+pinned with override_blocks).
+
 Runs on whatever devices exist (CPU here, a pod via the same pjit path on
 TPU — pass --mesh data,model sizes)."""
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import functools
 import time
 
 import jax
@@ -16,9 +25,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import TrainConfig
-from repro.configs.registry import build, get_config, list_archs, smoke_config
+from repro.configs.registry import (build, get_config, get_policy, has_policy,
+                                    list_archs, list_policies, smoke_config)
 from repro.core.accounting import budget_for
 from repro.core.bk import DPConfig
+from repro.core.policy import as_policy, resolve_policy
+from repro.core.tape import Tape, parse_key
 from repro.data.pipeline import Pipeline, PipelineConfig
 from repro.launch import sharding as sh
 from repro.optim.accumulate import accumulated_private_grad
@@ -26,16 +38,156 @@ from repro.optim.optimizers import make_optimizer
 from repro.optim.schedules import make_schedule
 from repro.runtime.fault_tolerance import (CheckpointManager, Heartbeat,
                                            PreemptionGuard)
+from repro.utils.tree import flatten
 
 
-def train(model_cfg, tc: TrainConfig, dp: DPConfig, log=print,
+def resolve_dp(arch: str, policy_name: str, mode: str, clipping: str,
+               sigma: float, log=print):
+    """--policy/--mode/--clipping/--sigma -> DPConfig or PrivacyPolicy."""
+    if policy_name == "auto":
+        policy_name = arch if has_policy(arch) else ""
+    if not policy_name:
+        return DPConfig(mode=mode, clipping=clipping, sigma=sigma)
+    dp = get_policy(policy_name, mode=mode, sigma=sigma)
+    if clipping != "automatic":
+        log(f"note: --clipping {clipping} is IGNORED — the policy preset "
+            f"{policy_name!r} defines clipping per group (pass --policy '' "
+            "for a flat DPConfig)")
+    log(f"policy preset {policy_name!r}: "
+        + ", ".join(f"{g.name}({g.scope}{'' if g.trainable else ',frozen'}"
+                    f" R={g.R})" for g in dp.groups))
+    return dp
+
+
+# ---------------------------------------------------------- autotune warmup
+def _block_candidates(blocks: tuple, align: int = 8) -> list:
+    """Candidate block tuples around the analytic choice: {x/2, x, 2x} per
+    knob (aligned, deduped, cartesian, capped)."""
+    axes = []
+    for name, val in blocks:
+        a = 128 if name == "block_v" else align
+        vals = sorted({max(a, (val // 2) // a * a), val,
+                       max(a, (val * 2) // a * a)})
+        axes.append([(name, v) for v in vals])
+    cands = [()]
+    for axis in axes:
+        cands = [c + (nv,) for c in cands for nv in axis]
+    return cands[:16]
+
+
+def _synth(struct, rng, vocab: int = 0):
+    """Concrete array for one eval_shape leaf (ids get valid vocab range)."""
+    if jnp.issubdtype(struct.dtype, jnp.integer):
+        return jax.random.randint(rng, struct.shape, 0, max(vocab, 2),
+                                  dtype=struct.dtype)
+    if struct.dtype == jnp.bool_:
+        return jnp.ones(struct.shape, jnp.bool_)
+    return jax.random.normal(rng, struct.shape, struct.dtype)
+
+
+def autotune_warmup(apply_fn, params, batch, dp, log=print) -> int:
+    """Measured-autotune the fused kernels on THIS model's tap shapes, once,
+    outside jit, and pin the winners via ``dispatch.override_blocks`` so
+    every subsequent plan (train step, kernel_report) uses them.
+
+    ROADMAP PR-1 follow-up: ``dispatch.autotune`` existed but nothing ran it
+    automatically. Returns the number of (tap-shape, phase) cells tuned."""
+    from repro.kernels import dispatch
+    from repro.kernels import ops as kops
+
+    policy = as_policy(dp)
+    if not policy.use_kernels:
+        return 0
+
+    def shape_run(p, b):
+        tape = Tape(None)
+        apply_fn(p, b, tape)
+        return tape.tap_zeros, tape.acts
+
+    taps, acts = jax.eval_shape(shape_run, params, batch)
+    flat_params = flatten(params)
+    res = resolve_policy(policy, flat_params)
+
+    runners = {  # (phase, kind, method) -> (ops fn, needs C, static knobs)
+        ("norm", "mm", "ghost"): kops.ghost_norm_mm,
+        ("norm", "mm", "direct"): kops.direct_norm_mm,
+        ("norm", "emb", "ghost"): kops.ghost_norm_emb,
+        ("norm", "moe", "direct"): kops.direct_norm_moe,
+        ("grad", "mm", "direct"): kops.clipped_grad_mm,
+        ("grad", "emb", "scatter"): kops.clipped_grad_emb,
+        ("grad", "moe", "direct"): kops.clipped_grad_moe,
+    }
+
+    rng = jax.random.PRNGKey(0)
+    tuned, seen = 0, set()
+    for key in sorted(acts):
+        path, kind, _ = parse_key(key)
+        wpath = path + "/w"
+        if wpath in res.frozen:
+            continue
+        method = res.method_for(wpath)
+        a_struct = acts[key]["a"] if kind == "moe" else acts[key]
+        ds_struct = taps[key]
+        vocab = flat_params[wpath].shape[-2] if kind == "emb" else 0
+        cell = (kind, tuple(a_struct.shape), tuple(ds_struct.shape), vocab,
+                method)
+        if cell in seen:
+            continue
+        seen.add(cell)
+
+        B = ds_struct.shape[-4] if kind == "moe" else ds_struct.shape[-3]
+        act = (dict(a=_synth(acts[key]["a"], rng),
+                    mask=jnp.ones(acts[key]["mask"].shape,
+                                  acts[key]["mask"].dtype))
+               if kind == "moe" else _synth(acts[key], rng, vocab))
+        ds = _synth(ds_struct, rng)
+        C = jnp.ones((B,), jnp.float32)
+
+        for phase in ("norm", "grad"):
+            if phase == "norm":
+                plan = dispatch.norm_plan(kind, a_struct.shape,
+                                          ds_struct.shape, policy.mode,
+                                          method)
+                args = (act, ds)
+            else:
+                plan = dispatch.grad_plan(kind, a_struct.shape,
+                                          ds_struct.shape, vocab)
+                args = (act, C, ds)
+            cands = _block_candidates(plan.blocks)
+            fn = runners.get((phase, kind, plan.method))
+            if plan.impl != "kernel" or fn is None or len(cands) <= 1:
+                continue
+            if phase == "grad" and kind == "emb":
+                fn = functools.partial(fn, vocab=vocab)  # static under jit
+            knobs = tuple(name for name, _ in plan.blocks)
+            run = jax.jit(fn, static_argnames=knobs)
+            try:
+                best = dispatch.autotune(run, cands, *args)
+            except ValueError as e:
+                log(f"autotune {key}/{phase}: no candidate ran ({e})")
+                continue
+            dispatch.override_blocks(phase, kind, a_struct.shape,
+                                     ds_struct.shape, best,
+                                     mode=policy.mode, vocab=vocab,
+                                     method=method)
+            tuned += 1
+            if best != plan.blocks:
+                log(f"autotune {key}/{phase}: {dict(plan.blocks)} -> "
+                    f"{dict(best)}")
+    log(f"autotune warmup: {tuned} kernel cells tuned, pinned via "
+        "override_blocks")
+    return tuned
+
+
+def train(model_cfg, tc: TrainConfig, dp, log=print,
           dataset_size: int = 0, target_epsilon: float = 0.0,
           delta: float = 1e-5):
     model = build(model_cfg)
-    if target_epsilon > 0 and dataset_size > 0 and dp.sigma == 0.0:
+    policy = as_policy(dp)
+    if target_epsilon > 0 and dataset_size > 0 and policy.sigma == 0.0:
         budget = budget_for(target_epsilon, delta, tc.global_batch,
                             dataset_size, tc.steps * tc.global_batch / dataset_size)
-        dp = DPConfig(**{**dp.__dict__, "sigma": budget.sigma})
+        dp = dataclasses.replace(dp, sigma=budget.sigma)
         log(f"calibrated sigma={budget.sigma:.3f} for eps={budget.epsilon:.2f}")
 
     opt = make_optimizer(tc.optimizer,
@@ -63,14 +215,19 @@ def train(model_cfg, tc: TrainConfig, dp: DPConfig, log=print,
             start = int(state["step"]) + 1
             log(f"resumed from step {start - 1}")
 
+    # ---- warmup: measured kernel autotune on the real tap shapes ------------
+    if tc.autotune == "on" or (tc.autotune == "auto"
+                               and jax.default_backend() != "cpu"):
+        autotune_warmup(model.apply, params, pipe.batch(0), dp, log=log)
+
     @jax.jit
     def step_fn(p, o, i, batch, rng):
-        if dp.mode == "nonprivate":
+        if as_policy(dp).mode == "nonprivate":
             from repro.core.engine import make_grad_fn
-            grads, aux = make_grad_fn(model.apply, dp)(p, batch, rng)
+            grads, aux = make_grad_fn(model.apply, dp)(p, batch, rng, i)
         else:
             grads, aux = accumulated_private_grad(model.apply, p, batch, rng,
-                                                  dp, tc.microbatch)
+                                                  dp, tc.microbatch, i)
         new_p, new_o = opt.update(grads, o, p, i)
         return new_p, new_o, aux["loss"]
 
@@ -118,6 +275,14 @@ def main():
     ap.add_argument("--sigma", type=float, default=0.0)
     ap.add_argument("--epsilon", type=float, default=0.0)
     ap.add_argument("--dataset-size", type=int, default=50000)
+    ap.add_argument("--policy", default="auto",
+                    help="PrivacyPolicy preset name; 'auto' = the arch's "
+                         f"registered preset (known: {list_policies()}), "
+                         "'' = flat DPConfig")
+    ap.add_argument("--autotune", choices=["auto", "on", "off"],
+                    default="auto",
+                    help="measured kernel-block autotune at startup "
+                         "(auto = on for non-CPU backends)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
     args = ap.parse_args()
@@ -127,9 +292,11 @@ def main():
     tc = TrainConfig(global_batch=args.batch, microbatch=args.microbatch,
                      seq_len=args.seq, steps=args.steps, lr=args.lr,
                      optimizer=args.optimizer,
+                     policy=args.policy, autotune=args.autotune,
                      checkpoint_dir=args.ckpt_dir,
                      checkpoint_every=args.ckpt_every)
-    dp = DPConfig(mode=args.mode, clipping=args.clipping, sigma=args.sigma)
+    dp = resolve_dp(args.arch, args.policy, args.mode, args.clipping,
+                    args.sigma)
     train(mc, tc, dp, dataset_size=args.dataset_size,
           target_epsilon=args.epsilon)
 

@@ -1,34 +1,35 @@
 """Gradient accumulation with DP semantics (paper footnote 2): the LOGICAL
 batch determines accuracy and privacy accounting; the PHYSICAL (micro) batch
 only determines memory. Per-sample clipping happens inside each microbatch;
-the clipped sums accumulate across microbatches in a lax.scan; Gaussian noise
-is added ONCE per logical batch."""
+the clipped sums accumulate across microbatches in a lax.scan; noise is added
+ONCE per logical batch via the policy's mechanism (sigma * composed
+sensitivity). Accepts a DPConfig or a PrivacyPolicy."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.bk import DPConfig, bk_clipped_sum
-from repro.core.noise import add_noise
-from repro.utils.tree import unflatten
+from repro.core.bk import bk_clipped_sum
+from repro.core.policy import as_policy, finalize_noise, resolve_policy
+from repro.utils.tree import flatten, unflatten
 
 
-def accumulated_baseline_grad(apply_fn, params, batch, rng, cfg: DPConfig,
-                              microbatch: int):
+def accumulated_baseline_grad(apply_fn, params, batch, rng, cfg,
+                              microbatch: int, step=None):
     """Microbatched accumulation for the non-BK modes (nonprivate /
     ghostclip / opacus / ...): per-microbatch grads are re-scaled to sums,
     accumulated under lax.scan, then noised once (DP modes)."""
     import dataclasses
 
     from repro.core.engine import make_grad_fn
-    from repro.utils.tree import flatten
 
+    policy = as_policy(cfg)
     B = jax.tree_util.tree_leaves(batch)[0].shape[0]
-    mb_cfg = (cfg if cfg.mode == "nonprivate"
-              else dataclasses.replace(cfg, sigma=0.0))
-    grad_fn = make_grad_fn(apply_fn, mb_cfg)
+    mb_policy = (policy if policy.mode == "nonprivate"
+                 else dataclasses.replace(policy, sigma=0.0))
+    grad_fn = make_grad_fn(apply_fn, mb_policy)
     if microbatch <= 0 or microbatch >= B:
-        return grad_fn(params, batch, rng)
+        return make_grad_fn(apply_fn, policy)(params, batch, rng, step)
     assert B % microbatch == 0, (B, microbatch)
     M = B // microbatch
     mb_batch = jax.tree_util.tree_map(
@@ -47,45 +48,48 @@ def accumulated_baseline_grad(apply_fn, params, batch, rng, cfg: DPConfig,
         return acc, aux["loss"]
 
     sums, losses = jax.lax.scan(body, zeros, mb_batch)
-    if cfg.mode == "nonprivate":
+    if policy.mode == "nonprivate":
         grads = jax.tree_util.tree_map(lambda s: s / float(B), sums)
     else:
-        flat = add_noise(flatten(sums), rng, cfg.sigma, cfg.R, float(B))
+        res = resolve_policy(policy, flatten(params))
+        flat = finalize_noise(policy, res, flatten(sums), rng, float(B), step)
         grads = unflatten(flat)
     return grads, {"loss": jnp.mean(losses)}
 
 
-def accumulated_private_grad(apply_fn, params, batch, rng, cfg: DPConfig,
-                             microbatch: int):
+def accumulated_private_grad(apply_fn, params, batch, rng, cfg,
+                             microbatch: int, step=None):
     """batch leaves (B_logical, ...); microbatch must divide B_logical.
     Returns (grads, aux) identical in distribution to the full-batch BK call."""
     from repro.core.bk import BK_MODES
 
-    if cfg.mode not in BK_MODES:
-        return accumulated_baseline_grad(apply_fn, params, batch, rng, cfg,
-                                         microbatch)
+    policy = as_policy(cfg)
+    if policy.mode not in BK_MODES:
+        return accumulated_baseline_grad(apply_fn, params, batch, rng, policy,
+                                         microbatch, step)
     B = jax.tree_util.tree_leaves(batch)[0].shape[0]
     if microbatch <= 0 or microbatch >= B:
         from repro.core.bk import bk_private_grad
-        return bk_private_grad(apply_fn, params, batch, rng, cfg)
+        return bk_private_grad(apply_fn, params, batch, rng, policy, step)
     assert B % microbatch == 0, (B, microbatch)
     M = B // microbatch
     mb_batch = jax.tree_util.tree_map(
         lambda x: x.reshape((M, microbatch) + x.shape[1:]), batch)
 
     sums0, aux0 = jax.eval_shape(
-        lambda p, b: bk_clipped_sum(apply_fn, p, b, cfg), params,
+        lambda p, b: bk_clipped_sum(apply_fn, p, b, policy), params,
         jax.tree_util.tree_map(lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
                                mb_batch))
     zeros = {k: jnp.zeros(v.shape, v.dtype) for k, v in sums0.items()}
 
     def body(acc, mb):
-        s, aux = bk_clipped_sum(apply_fn, params, mb, cfg)
+        s, aux = bk_clipped_sum(apply_fn, params, mb, policy)
         acc = {k: acc[k] + s[k] for k in acc}
         return acc, (aux["loss"], aux["per_sample_norms"])
 
     sums, (losses, norms) = jax.lax.scan(body, zeros, mb_batch)
-    flat = add_noise(sums, rng, cfg.sigma, cfg.R, float(B))
+    res = resolve_policy(policy, flatten(params))
+    flat = finalize_noise(policy, res, sums, rng, float(B), step)
     aux = {"loss": jnp.mean(losses),
            "per_sample_norms": norms.reshape(-1)}
     return unflatten(flat), aux

@@ -1,0 +1,370 @@
+"""PrivacyPolicy semantics: group partition, group-wise clipping vs a vmap
+per-sample reference, frozen groups (zero grads, no taps), per-group
+sensitivity composition, pluggable noise (tree aggregation), and the
+DPConfig -> single-flat-group shim."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bk import DPConfig
+from repro.core.engine import PrivacyEngine, make_grad_fn
+from repro.core.noise import TreeAggregationMechanism, get_mechanism
+from repro.core.policy import (ParamGroup, PrivacyPolicy, as_policy,
+                               resolve_policy)
+from repro.models.mlp import MLP, MLPConfig
+from repro.utils.tree import flatten
+
+B = 8
+
+
+def _setup(bias=True):
+    model = MLP(MLPConfig(d_in=12, width=16, depth=3, n_classes=5, bias=bias))
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {
+        "x": jax.random.normal(jax.random.PRNGKey(1), (B, 12)),
+        "y": jax.random.randint(jax.random.PRNGKey(2), (B,), 0, 5),
+    }
+    return model, params, batch
+
+
+TWO_GROUPS = (
+    ParamGroup("first", r"l0/.*", clipping="abadi", R=0.7, scope="group"),
+    ParamGroup("rest", ".*", clipping="abadi", R=1.3, scope="group"),
+)
+
+
+def _vmap_reference(model, params, batch, policy):
+    """Per-sample grads by vmap(grad) + hand-rolled group-wise clipping —
+    the ground truth every implementation must match."""
+    res = resolve_policy(policy, flatten(params))
+    gfn = jax.grad(lambda p, s: model.apply(
+        p, jax.tree_util.tree_map(lambda x: x[None], s),
+        __import__("repro.core.tape", fromlist=["Tape"]).Tape(None))[0])
+    per_g = flatten(jax.vmap(gfn, in_axes=(None, 0))(params, batch))
+    norms, C = {}, {}
+    for unit in res.units:
+        sq = sum(jnp.sum(jnp.square(per_g[p].reshape(B, -1)), axis=1)
+                 for p in unit.paths)
+        norms[unit.name] = jnp.sqrt(sq)
+        C[unit.name] = unit.clip_fn()(norms[unit.name])
+    out = {}
+    for p, g in per_g.items():
+        if p in res.frozen:
+            out[p] = jnp.zeros(g.shape[1:], g.dtype)
+        else:
+            unit = res.units[res.unit_of[p]]
+            out[p] = jnp.einsum("b...,b->...", g, C[unit.name]) / B
+    return out, norms
+
+
+# ----------------------------------------------------------------- partition
+def test_partition_first_match_wins():
+    policy = PrivacyPolicy(groups=TWO_GROUPS)
+    _, params, _ = _setup()
+    res = resolve_policy(policy, flatten(params))
+    assert res.group_of["l0/w"].name == "first"
+    assert res.group_of["l1/w"].name == "rest"
+    # a true partition: every param in exactly one unit
+    seen = [p for u in res.units for p in u.paths]
+    assert sorted(seen) == sorted(flatten(params))
+    assert len(seen) == len(set(seen))
+
+
+def test_unmatched_param_raises():
+    policy = PrivacyPolicy(groups=(
+        ParamGroup("only-l0", r"l0/.*", R=1.0, scope="group"),))
+    _, params, _ = _setup()
+    with pytest.raises(ValueError, match="matched no policy group"):
+        resolve_policy(policy, flatten(params))
+
+
+def test_flat_groups_must_agree_on_R():
+    policy = PrivacyPolicy(groups=(
+        ParamGroup("a", r"l0/.*", R=1.0, scope="flat"),
+        ParamGroup("b", ".*", R=2.0, scope="flat"),
+    ))
+    _, params, _ = _setup()
+    with pytest.raises(ValueError, match="flat-scope groups"):
+        resolve_policy(policy, flatten(params))
+
+
+def test_bad_scope_and_method_raise():
+    with pytest.raises(ValueError, match="scope"):
+        ParamGroup("x", ".*", scope="layer")
+    with pytest.raises(ValueError, match="method"):
+        ParamGroup("x", ".*", method="magic")
+
+
+# ---------------------------------------------------- group-wise correctness
+@pytest.mark.parametrize("mode", ["bk", "bk-mixopt", "opacus"])
+def test_groupwise_matches_vmap_reference(mode):
+    model, params, batch = _setup()
+    policy = PrivacyPolicy(groups=TWO_GROUPS, mode=mode, sigma=0.0)
+    ref, ref_norms = _vmap_reference(model, params, batch, policy)
+    got, aux = jax.jit(make_grad_fn(model.apply, policy))(
+        params, batch, jax.random.PRNGKey(7))
+    for name, n in ref_norms.items():
+        np.testing.assert_allclose(aux["group_norms"][name], n,
+                                   rtol=1e-5, atol=1e-7, err_msg=name)
+    for p, g in sorted(flatten(got).items()):
+        np.testing.assert_allclose(g, ref[p], rtol=1e-4, atol=1e-6,
+                                   err_msg=f"{mode}:{p}")
+
+
+@pytest.mark.parametrize("mode", ["tfprivacy", "fastgradclip", "ghostclip",
+                                  "bk-mixghost"])
+def test_all_other_modes_honor_policy(mode):
+    model, params, batch = _setup()
+    policy = PrivacyPolicy(groups=TWO_GROUPS, mode=mode, sigma=0.0)
+    ref, _ = _vmap_reference(model, params, batch, policy)
+    got, _ = jax.jit(make_grad_fn(model.apply, policy))(
+        params, batch, jax.random.PRNGKey(7))
+    for p, g in sorted(flatten(got).items()):
+        np.testing.assert_allclose(g, ref[p], rtol=1e-4, atol=1e-6,
+                                   err_msg=f"{mode}:{p}")
+
+
+def test_method_override_same_norms():
+    """Per-group ghost-vs-direct override changes the plan, not the math."""
+    model, params, batch = _setup()
+    base = PrivacyPolicy(groups=(
+        ParamGroup("a", r"l0/.*", R=1.0, scope="group", method="direct"),
+        ParamGroup("b", ".*", R=1.0, scope="group", method="ghost"),
+    ), mode="bk-mixghost")
+    swapped = PrivacyPolicy(groups=(
+        ParamGroup("a", r"l0/.*", R=1.0, scope="group", method="ghost"),
+        ParamGroup("b", ".*", R=1.0, scope="group", method="direct"),
+    ), mode="bk-mixghost")
+    g1, a1 = make_grad_fn(model.apply, base)(params, batch,
+                                             jax.random.PRNGKey(3))
+    g2, a2 = make_grad_fn(model.apply, swapped)(params, batch,
+                                                jax.random.PRNGKey(3))
+    for name in ("a", "b"):
+        np.testing.assert_allclose(a1["group_norms"][name],
+                                   a2["group_norms"][name],
+                                   rtol=1e-5, atol=1e-7)
+
+
+# -------------------------------------------------------------- frozen groups
+@pytest.mark.parametrize("mode", ["bk", "bk-mixopt", "opacus", "ghostclip"])
+def test_frozen_group_zero_grads(mode):
+    model, params, batch = _setup()
+    policy = PrivacyPolicy(groups=(
+        ParamGroup("frozen", r"l0/.*", trainable=False),
+        ParamGroup("rest", ".*", R=1.0),
+    ), mode=mode, sigma=0.5)
+    got, _ = make_grad_fn(model.apply, policy)(params, batch,
+                                               jax.random.PRNGKey(5))
+    flat = flatten(got)
+    for p, g in flat.items():
+        if p.startswith("l0/"):
+            assert np.all(np.asarray(g) == 0), p  # not even noise
+        else:
+            assert np.any(np.asarray(g) != 0), p
+
+
+def test_frozen_group_emits_no_tap():
+    model, params, batch = _setup()
+    policy = PrivacyPolicy(groups=(
+        ParamGroup("frozen", r"l0/.*", trainable=False),
+        ParamGroup("rest", ".*", R=1.0),
+    ), mode="bk")
+    engine = PrivacyEngine(model.apply, policy)
+    report = engine.kernel_report(params, batch)
+    assert "l0#mm" not in report
+    assert {"l1#mm", "l2#mm", "head#mm"} <= set(report)
+
+
+def test_frozen_trainable_agreement():
+    """Trainable-group grads are unchanged by freezing a disjoint group
+    (clipping-only; the frozen params leave the norm pool)."""
+    model, params, batch = _setup()
+    frozen = PrivacyPolicy(groups=(
+        ParamGroup("frozen", r"l0/.*", trainable=False),
+        ParamGroup("rest", ".*", R=1.0, scope="group"),
+    ), mode="bk")
+    ref, _ = _vmap_reference(model, params, batch, frozen)
+    got, _ = make_grad_fn(model.apply, frozen)(params, batch,
+                                               jax.random.PRNGKey(5))
+    for p, g in sorted(flatten(got).items()):
+        np.testing.assert_allclose(g, ref[p], rtol=1e-4, atol=1e-6, err_msg=p)
+
+
+# ---------------------------------------------------------------- sensitivity
+def test_sensitivity_composition():
+    _, params, _ = _setup()
+    policy = PrivacyPolicy(groups=(
+        ParamGroup("a", r"l0/.*", R=3.0, scope="group"),
+        ParamGroup("b", ".*", R=4.0, scope="group"),
+    ))
+    res = resolve_policy(policy, flatten(params))
+    assert res.sensitivity == pytest.approx(5.0)
+    # empty groups contribute nothing
+    policy2 = PrivacyPolicy(groups=(
+        ParamGroup("ghost-town", r"does/not/exist", R=100.0, scope="group"),
+        ParamGroup("b", ".*", R=4.0, scope="group"),
+    ))
+    assert resolve_policy(policy2,
+                          flatten(params)).sensitivity == pytest.approx(4.0)
+
+
+def test_noise_scales_with_sensitivity():
+    """sigma * sqrt(sum R_g^2) reaches every leaf regardless of its group."""
+    _, params, _ = _setup()
+    flat = {p: jnp.zeros(100_000, jnp.float32) for p in ("l0/w", "l1/w")}
+    policy = PrivacyPolicy(groups=(
+        ParamGroup("a", r"l0/.*", R=3.0, scope="group"),
+        ParamGroup("b", ".*", R=4.0, scope="group"),
+    ), sigma=1.0)
+    res = resolve_policy(policy, flat)
+    out = policy.mechanism().add(flat, jax.random.PRNGKey(0), policy.sigma,
+                                 res.sensitivity, 1.0)
+    for p, g in out.items():
+        assert np.std(np.asarray(g)) == pytest.approx(5.0, rel=0.05), p
+
+
+# ----------------------------------------------------------- noise mechanisms
+def test_tree_mechanism_shape_and_variance():
+    mech = TreeAggregationMechanism(seed=0)
+    shape = (200_000,)
+    for t, pop in [(1, 1), (2, 1), (3, 2), (6, 2), (7, 3), (8, 1)]:
+        n = mech.prefix_noise("w", shape, t)
+        assert n.shape == shape and n.dtype == jnp.float32
+        assert np.var(np.asarray(n)) == pytest.approx(pop, rel=0.05), t
+
+
+def test_tree_mechanism_telescopes():
+    """Per-step increments sum EXACTLY to the prefix-tree noise — the
+    optimizer's running gradient sum carries N(t), not t independent draws."""
+    mech = TreeAggregationMechanism(seed=3)
+    flat = {"a/w": jnp.zeros((4, 5)), "b": jnp.zeros((7,))}
+    total = {p: np.zeros(g.shape, np.float32) for p, g in flat.items()}
+    T = 11
+    for step in range(T):
+        out = mech.add(flat, jax.random.PRNGKey(step), sigma=1.0,
+                       sensitivity=1.0, denom=1.0, step=step)
+        for p in flat:
+            total[p] += np.asarray(out[p])
+    for p, g in flat.items():
+        np.testing.assert_allclose(total[p],
+                                   np.asarray(mech.prefix_noise(p, g.shape, T)),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_tree_mechanism_via_engine():
+    model, params, batch = _setup()
+    policy = PrivacyPolicy(groups=(ParamGroup("all", ".*", R=1.0),),
+                           mode="bk", sigma=0.5, noise="tree")
+    fn = jax.jit(make_grad_fn(model.apply, policy))
+    g0, _ = fn(params, batch, jax.random.PRNGKey(0), 0)
+    g1, _ = fn(params, batch, jax.random.PRNGKey(0), 1)
+    # different steps -> different noise increments
+    assert not np.allclose(np.asarray(flatten(g0)["l1/w"]),
+                           np.asarray(flatten(g1)["l1/w"]))
+
+
+def test_tree_mechanism_requires_step():
+    """Omitting the step would silently re-add the same draw every call —
+    it must raise instead."""
+    model, params, batch = _setup()
+    policy = PrivacyPolicy(groups=(ParamGroup("all", ".*", R=1.0),),
+                           mode="bk", sigma=0.5, noise="tree")
+    fn = make_grad_fn(model.apply, policy)
+    with pytest.raises(ValueError, match="stateful"):
+        fn(params, batch, jax.random.PRNGKey(0))
+
+
+def test_tree_depth_threads_through_policy():
+    policy = PrivacyPolicy(groups=(ParamGroup("all", ".*", R=1.0),),
+                           noise="tree", noise_depth=7)
+    assert policy.mechanism().depth == 7
+
+
+def test_unknown_mechanism_raises():
+    with pytest.raises(ValueError, match="unknown noise mechanism"):
+        get_mechanism("laplace")
+
+
+# ------------------------------------------------------------------- the shim
+def test_dpconfig_shim_lowering():
+    cfg = DPConfig(mode="bk-mixopt", clipping="abadi", R=2.0, sigma=0.3,
+                   use_kernels=False)
+    policy = as_policy(cfg)
+    assert len(policy.groups) == 1
+    g = policy.groups[0]
+    assert (g.scope, g.clipping, g.R) == ("flat", "abadi", 2.0)
+    assert (policy.mode, policy.sigma, policy.noise,
+            policy.use_kernels) == ("bk-mixopt", 0.3, "gaussian", False)
+
+
+def test_dpconfig_and_lowered_policy_agree():
+    model, params, batch = _setup()
+    cfg = DPConfig(mode="bk", clipping="automatic", R=1.0, sigma=0.4)
+    g1, a1 = make_grad_fn(model.apply, cfg)(params, batch,
+                                            jax.random.PRNGKey(7))
+    g2, a2 = make_grad_fn(model.apply, as_policy(cfg))(params, batch,
+                                                       jax.random.PRNGKey(7))
+    np.testing.assert_array_equal(a1["per_sample_norms"],
+                                  a2["per_sample_norms"])
+    assert "clip_factors" in a1  # single-unit aux keeps the old contract
+    for (p, x), (_, y) in zip(sorted(flatten(g1).items()),
+                              sorted(flatten(g2).items())):
+        np.testing.assert_array_equal(x, y, err_msg=p)
+
+
+# ------------------------------------------------------------------- presets
+def test_registered_policy_presets_resolve():
+    from repro.configs.registry import get_policy, list_policies
+    from repro.configs.registry import build, smoke_config
+
+    assert "deepseek-moe-16b" in list_policies()
+    cfg = smoke_config("deepseek-moe-16b").with_(dtype="float32",
+                                                 param_dtype="float32")
+    params = build(cfg).init(jax.random.PRNGKey(0))
+    policy = get_policy("deepseek-moe-16b", sigma=0.1)
+    res = resolve_policy(policy, flatten(params))
+    assert res.group_of["blocks/mlp/experts/up/w"].name == "experts"
+    assert res.group_of["blocks/mlp/router/w"].name == "router"
+    assert res.group_of["blocks/attn/qkv/w"].name == "dense"
+    assert policy.sigma == 0.1
+
+
+def test_microbatch_accumulation_with_policy():
+    from repro.optim.accumulate import accumulated_private_grad
+    model, params, batch = _setup()
+    policy = PrivacyPolicy(groups=TWO_GROUPS, mode="bk", sigma=0.2)
+    full, _ = jax.jit(lambda p, b, r: accumulated_private_grad(
+        model.apply, p, b, r, policy, 0))(params, batch, jax.random.PRNGKey(1))
+    micro, _ = jax.jit(lambda p, b, r: accumulated_private_grad(
+        model.apply, p, b, r, policy, 4))(params, batch, jax.random.PRNGKey(1))
+    for (p, x), (_, y) in zip(sorted(flatten(full).items()),
+                              sorted(flatten(micro).items())):
+        np.testing.assert_allclose(x, y, rtol=1e-4, atol=1e-6, err_msg=p)
+
+
+# ---------------------------------------------------------- autotune warmup
+def test_autotune_warmup_pins_blocks(monkeypatch):
+    from repro.kernels import dispatch
+    from repro.launch.train import autotune_warmup
+    monkeypatch.setenv("REPRO_KERNELS", "1")  # tiny shapes: force kernel impl
+    dispatch.clear_cache()
+    try:
+        model, params, batch = _setup()
+        cfg = DPConfig(mode="bk", use_kernels=True)
+        n = autotune_warmup(model.apply, params, batch, cfg, log=lambda *_: None)
+        assert n > 0
+        # the pinned plan survives for identical shapes and still computes
+        # the right thing
+        got, aux = make_grad_fn(model.apply, cfg)(params, batch,
+                                                  jax.random.PRNGKey(7))
+        ref, raux = make_grad_fn(
+            model.apply, dataclasses.replace(cfg, use_kernels=False))(
+                params, batch, jax.random.PRNGKey(7))
+        np.testing.assert_allclose(aux["per_sample_norms"],
+                                   raux["per_sample_norms"],
+                                   rtol=1e-4, atol=1e-6)
+    finally:
+        dispatch.clear_cache()
