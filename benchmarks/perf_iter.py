@@ -70,6 +70,13 @@ COLL_W = {"all-reduce": 2.0}
 def run_variant(arch, shape, variant, multi_pod=False):
     kw = dict(VARIANTS[variant])
     rule_patch = kw.pop("rule_patch", None)
+    # pin the flat DPConfig: plan_cell's dp=None now resolves the arch's
+    # registered group-wise policy preset, which changes the book-keeping
+    # program — perf series must stay comparable to recorded baselines
+    if "dp" not in kw:
+        from repro.core.bk import DPConfig
+        kw["dp"] = DPConfig(mode="bk-mixopt", clipping="automatic",
+                            sigma=1.0)
     mesh = make_production_mesh(multi_pod=multi_pod)
     t0 = time.time()
     if rule_patch:

@@ -5,6 +5,10 @@ Full run (a few hours on this CPU container; minutes on one TPU host):
     PYTHONPATH=src python examples/train_dp_lm.py
 Smoke run:
     PYTHONPATH=src python examples/train_dp_lm.py --smoke
+DP-FTRL instead of DP-SGD-style AdamW (tree-aggregation noise, epoch
+restarts with Honaker completion — amplification-free privacy, no Poisson
+sampling assumption):
+    PYTHONPATH=src python examples/train_dp_lm.py --smoke --ftrl
 """
 import argparse
 
@@ -25,6 +29,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--steps", type=int, default=0)
+    ap.add_argument("--ftrl", action="store_true",
+                    help="momentum DP-FTRL + tree-aggregation noise with "
+                         "epoch restarts and Honaker completion")
     args = ap.parse_args()
 
     if args.smoke:
@@ -39,6 +46,18 @@ def main():
         tc = TrainConfig(global_batch=64, microbatch=16, seq_len=256,
                         steps=args.steps or 300, lr=3e-4, warmup=20,
                         checkpoint_dir="/tmp/repro_dp_lm", checkpoint_every=50)
+
+    if args.ftrl:
+        # restart the tree (and the FTRL anchor) every ~quarter of the run;
+        # train() switches the noise mechanism to 'tree' automatically
+        import dataclasses
+        tc = dataclasses.replace(tc, optimizer="ftrl", ftrl_momentum=0.9,
+                                 restart_every=max(2, tc.steps // 4),
+                                 tree_completion=True, weight_decay=0.0,
+                                 # constant schedule discards warmup: FTRL
+                                 # rescales the whole prefix by lr_t, so
+                                 # neither decay nor ramp applies
+                                 lr_schedule="constant", warmup=0)
 
     dp = DPConfig(mode="bk-mixopt", clipping="automatic", R=1.0)
     params, losses = train(cfg, tc, dp, dataset_size=100_000,

@@ -75,6 +75,12 @@ class TrainConfig:
     optimizer: str = "adamw"
     weight_decay: float = 0.0
     warmup: int = 0
+    # DP-FTRL (optimizer="ftrl"): momentum over noisy gradient prefixes,
+    # epoch restarts every N steps (0 = never; also drives the tree-noise
+    # mechanism's restarts), and Honaker tree completion at each restart
+    ftrl_momentum: float = 0.0
+    restart_every: int = 0
+    tree_completion: bool = False
     seed: int = 0
     checkpoint_every: int = 0
     checkpoint_dir: str = ""

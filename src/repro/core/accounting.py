@@ -86,6 +86,45 @@ def compose_sensitivity(Rs) -> float:
     return math.sqrt(sum(float(R) ** 2 for R in Rs))
 
 
+def effective_sigma(sigmas) -> float:
+    """Joint noise multiplier of heterogeneous per-group Gaussians
+    (He et al. 2022 §4): group g's coordinates carry noise sigma_g * R_g
+    with per-group sensitivity R_g on disjoint coordinate blocks, so the
+    mean shift between neighbouring outputs reduces (along its own
+    direction) to ONE Gaussian with multiplier
+    (sum_g sigma_g^-2)^(-1/2). Uniform sigmas over k groups give
+    sigma/sqrt(k) — per-group noise at the group's own sensitivity is
+    strictly weaker than flat noise at the composed sensitivity, which is
+    exactly why the joint accounting (not the flat bound) must be used."""
+    sigmas = [float(s) for s in sigmas]
+    if not sigmas:
+        raise ValueError(
+            "no noise multipliers to compose — the policy resolved to zero "
+            "trainable clip units (all groups frozen?); there is no "
+            "mechanism to account for")
+    if any(s <= 0.0 for s in sigmas):
+        return 0.0
+    return sum(s ** -2 for s in sigmas) ** -0.5
+
+
+def rdp_sgm_heterogeneous(q: float, sigmas, alpha: float) -> float:
+    """RDP of ONE subsampled step releasing k per-group Gaussians on
+    disjoint coordinate blocks with multipliers sigma_g (each relative to
+    its own group's sensitivity).
+
+    The per-group Gaussian RDP curves compose at the BASE-mechanism level:
+    independent noise on disjoint blocks adds Renyi divergences,
+    sum_g alpha/(2 sigma_g^2) = alpha/(2 effective_sigma^2), i.e. the block
+    release is Renyi-identical to one Gaussian at ``effective_sigma``. The
+    subsampling event is SHARED by every group (one batch draw), so the
+    standard SGM curve then applies to that single equivalent Gaussian.
+    (Composing k separately-subsampled per-group SGM curves instead would
+    count the amplification k times and UNDER-report epsilon — invalid for
+    the shared-batch mechanism this engine runs.)
+    """
+    return rdp_sgm(q, effective_sigma(sigmas), alpha)
+
+
 @dataclass(frozen=True)
 class PrivacyBudget:
     epsilon: float
@@ -95,9 +134,21 @@ class PrivacyBudget:
     steps: int
 
 
-def compute_epsilon(sigma: float, sample_rate: float, steps: int,
+def compute_epsilon(sigma, sample_rate: float, steps: int,
                     delta: float, orders=DEFAULT_ORDERS) -> float:
-    rdp = np.array([steps * rdp_sgm(sample_rate, sigma, a) for a in orders])
+    """(eps, delta) after ``steps`` SGM compositions.
+
+    ``sigma`` is either one noise multiplier (the flat scheme) or a sequence
+    of per-group multipliers — ``ResolvedPolicy.noise_multipliers()`` — in
+    which case the heterogeneous joint bound is composed. With every
+    sigma_scale at 1.0 the multiplier list is sigma * S/R_u per unit and the
+    joint bound reproduces the flat single-sigma bound exactly."""
+    if np.ndim(sigma) > 0:
+        rdp = np.array([steps * rdp_sgm_heterogeneous(sample_rate, sigma, a)
+                        for a in orders])
+    else:
+        rdp = np.array([steps * rdp_sgm(sample_rate, float(sigma), a)
+                        for a in orders])
     return rdp_to_eps(rdp, np.array(orders), delta)
 
 

@@ -308,7 +308,7 @@ def bk_private_grad(apply_fn, params, batch, rng, cfg, step=None):
     policy = as_policy(cfg)
     B = batch_size_of(batch)
     flat_sums, aux = bk_clipped_sum(apply_fn, params, batch, policy)
-    # ---- phase 4: noise (sigma * composed sensitivity) + scale --------------
+    # ---- phase 4: noise (sigma * sigma_scale_u * composed S per unit) + scale
     res = resolve_policy(policy, flatten(params))
     flat_grads = finalize_noise(policy, res, flat_sums, rng, float(B), step)
     return unflatten(flat_grads), aux

@@ -15,6 +15,11 @@ DP (group-wise clipping, frozen groups, pluggable noise):
     ), mode="bk", sigma=0.5)
     engine = PrivacyEngine(model.apply, policy)
 
+Heterogeneous noise rides the same policy (``ParamGroup.sigma_scale``), and
+DP-FTRL training swaps ``noise="tree"`` in (with epoch restarts /
+completion) — pass the step index to ``engine.grad(..., step)`` for any
+stateful mechanism.
+
 Modes: 'nonprivate' | 'tfprivacy' | 'opacus' | 'fastgradclip' | 'ghostclip'
      | 'bk' | 'bk-mixghost' | 'bk-mixopt'
 """

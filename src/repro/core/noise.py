@@ -7,9 +7,12 @@ A ``NoiseMechanism`` is any object with
 
     add(flat_grads, rng, sigma, sensitivity, denom, step=None) -> dict
 
-returning ``(G + sigma * sensitivity * xi) / denom`` per leaf, where
-``sensitivity`` is the policy's composed L2 sensitivity (a bare R for flat
-clipping). Two are registered:
+returning ``(G + sigma * scale * xi) / denom`` per leaf, where ``scale`` is
+either one L2 sensitivity shared by every leaf (a bare R for flat clipping,
+the policy's composed sensitivity for group-wise clipping) or a
+``{path: scale}`` mapping for heterogeneous per-group noise
+(``ParamGroup.sigma_scale``; the accounting composes the per-group Gaussian
+curves jointly — see ``accounting.compute_epsilon``). Two are registered:
 
   'gaussian'  the classic Gaussian mechanism (per-step independent noise)
   'tree'      binary-tree aggregation (Kairouz et al. 2021, DP-FTRL): the
@@ -20,6 +23,17 @@ clipping). Two are registered:
               (NOT the per-step rng) so node draws are shared across steps
               and the increments telescope.
 
+Tree restarts (DP-FTRL epoch restarts): with ``restart_every=E`` the tree is
+rebuilt every E steps — epoch e = step // E gets its own node seeds and the
+local prefix index resets to 1, matching an FTRL optimizer that rebases
+theta0 and zeroes its gradient prefix at the same boundary (``optim.ftrl``).
+With ``completion=True`` (the honest-restart variance correction, Honaker
+completion as in the DP-FTRL reference code) the LAST increment of each
+epoch advances the prefix to the next power of two, so the noise baked into
+the restart point is the completed tree's root path — popcount(2^k) = 1 node
+of variance instead of popcount(E) — at no extra privacy cost (every tree
+node is already released).
+
 ``partial_sigma`` implements the distributed-noise trick: on an n-way data
 axis each shard adds N(0, (sigma/sqrt(n))^2) *before* the gradient
 all-reduce; the reduced sum then carries exactly N(0, sigma^2) — identical
@@ -29,22 +43,37 @@ when ``dp.distributed_noise`` is on.)
 from __future__ import annotations
 
 import zlib
+from typing import Mapping
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def _path_rng(rng, path: str):
     return jax.random.fold_in(rng, zlib.crc32(path.encode()) & 0x7FFFFFFF)
 
 
-def add_noise(flat_grads: dict, rng, sigma: float, R: float, denom: float) -> dict:
-    """(G + sigma*R*xi) / denom per leaf. sigma==0 -> just G/denom."""
+def _scale_for(sensitivity, path: str) -> float:
+    """Per-leaf noise scale: a shared float or a {path: scale} mapping."""
+    if isinstance(sensitivity, Mapping):
+        return sensitivity[path]
+    return sensitivity
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (tree-completion horizon)."""
+    return 1 << max(0, int(n) - 1).bit_length()
+
+
+def add_noise(flat_grads: dict, rng, sigma: float, R, denom: float) -> dict:
+    """(G + sigma*R*xi) / denom per leaf. sigma==0 -> just G/denom.
+    ``R`` may be a float (shared scale) or a {path: scale} mapping."""
     out = {}
     for path, g in flat_grads.items():
         if sigma > 0.0:
             xi = jax.random.normal(_path_rng(rng, path), g.shape, jnp.float32)
-            g = g + (sigma * R) * xi.astype(g.dtype)
+            g = g + (sigma * _scale_for(R, path)) * xi.astype(g.dtype)
         out[path] = g / denom
     return out
 
@@ -58,10 +87,11 @@ class GaussianMechanism:
     """Per-step independent Gaussian noise — the DP-SGD default."""
     name = "gaussian"
 
-    def __init__(self, seed: int = 0, depth: int = 0):
-        del seed, depth  # stateless: noise comes from the per-step rng
+    def __init__(self, seed: int = 0, depth: int = 0,
+                 restart_every: int = 0, completion: bool = False):
+        del seed, depth, restart_every, completion  # stateless: per-step rng
 
-    def add(self, flat_grads: dict, rng, sigma: float, sensitivity: float,
+    def add(self, flat_grads: dict, rng, sigma: float, sensitivity,
             denom: float, step=None) -> dict:
         del step  # per-step independence: the per-call rng is the state
         return add_noise(flat_grads, rng, sigma, sensitivity, denom)
@@ -80,35 +110,65 @@ class TreeAggregationMechanism:
 
     The per-call ``rng`` is IGNORED: node noises must be identical whenever
     the same node covers different prefixes, so they key off the fixed
-    ``seed`` + (path, level, index) only. ``step`` may be a python int or a
-    traced jnp scalar (the node indices are data to ``fold_in``).
+    ``seed`` + (path, epoch, level, index) only. ``step`` may be a python int
+    or a traced jnp scalar (node/epoch indices are data to ``fold_in``).
+
+    ``restart_every=E`` rebuilds the tree every E steps (epoch restarts):
+    step t maps to epoch e = step//E with local prefix index (step % E) + 1,
+    and every epoch draws from fresh node seeds. An FTRL optimizer zeroes its
+    gradient prefix at the same boundary, so the first increment of a new
+    epoch is the full N_e(1) of the fresh tree. ``completion=True``
+    additionally advances the LAST increment of each epoch to
+    N_e(next_pow2(E)), so the model state that the restart rebases on
+    carries single-root-node noise variance (the honest-restart correction);
+    it is a no-op when E is a power of two.
 
     Cost note: with a traced step every level draws a full leaf-sized normal
     (the dead levels' zero weights can't be DCE'd), i.e. 2*depth draws per
     leaf per ``add``. ``depth`` only needs to cover the horizon
-    (2^depth - 1 steps) — set ``PrivacyPolicy.noise_depth`` to
-    ceil(log2(steps + 1)) to pay only what the run needs.
+    (2^depth - 1 steps; next_pow2(E) under restarts) — set
+    ``PrivacyPolicy.noise_depth`` to ceil(log2(steps + 1)) to pay only what
+    the run needs.
     """
     name = "tree"
 
-    def __init__(self, seed: int = 0, depth: int = 30):
+    def __init__(self, seed: int = 0, depth: int = 30,
+                 restart_every: int = 0, completion: bool = False):
         self.seed = seed
         self.depth = depth           # supports up to 2^depth - 1 steps
+        self.restart_every = int(restart_every)
+        self.completion = bool(completion)
+        if self.completion and self.restart_every <= 0:
+            raise ValueError("tree completion needs restart_every > 0 "
+                             "(it corrects the noise at epoch boundaries)")
+        if self.restart_every > 0 and next_pow2(self.restart_every) >= (1 << depth):
+            raise ValueError(
+                f"depth {depth} cannot cover the per-epoch horizon "
+                f"{next_pow2(self.restart_every)} (restart_every="
+                f"{self.restart_every})")
 
-    def _node(self, path: str, level: int, idx):
+    def _node(self, path: str, level: int, idx, epoch=0):
         k = _path_rng(jax.random.PRNGKey(self.seed), path)
+        k = jax.random.fold_in(k, epoch)
         return jax.random.fold_in(jax.random.fold_in(k, level), idx)
 
-    def prefix_noise(self, path: str, shape, t, dtype=jnp.float32):
-        """N(t): unit-variance-per-node cumulative noise for steps [1..t]."""
+    def prefix_noise(self, path: str, shape, t, dtype=jnp.float32, epoch=0):
+        """N_e(t): unit-variance-per-node cumulative noise for the epoch's
+        steps [1..t]."""
         out = jnp.zeros(shape, dtype)
         for b in range(self.depth):
             i = t >> b
-            z = jax.random.normal(self._node(path, b, i), shape, dtype)
+            z = jax.random.normal(self._node(path, b, i, epoch), shape, dtype)
             out = out + jnp.asarray(i & 1, dtype) * z
         return out
 
-    def add(self, flat_grads: dict, rng, sigma: float, sensitivity: float,
+    def _epoch_local(self, step):
+        """Global 0-indexed step -> (epoch, local 1-indexed prefix t)."""
+        if self.restart_every <= 0:
+            return 0, step + 1
+        return step // self.restart_every, (step % self.restart_every) + 1
+
+    def add(self, flat_grads: dict, rng, sigma: float, sensitivity,
             denom: float, step=None) -> dict:
         del rng
         if sigma > 0.0 and step is None:
@@ -118,13 +178,30 @@ class TreeAggregationMechanism:
             raise ValueError(
                 "tree aggregation is stateful: pass the step index — "
                 "grad_fn(params, batch, rng, step) / engine.grad(..., step)")
-        t = (step if step is not None else 0) + 1  # steps are 0-indexed
+        epoch, t = self._epoch_local(step if step is not None else 0)
+        if isinstance(t, (int, np.integer)) and t >= (1 << self.depth):
+            # past the horizon every level index t>>b goes even and N(t)
+            # collapses toward zero — increments would SUBTRACT released
+            # noise, silently voiding the guarantee. (Traced steps can't be
+            # checked here; size depth from the run length as the train
+            # driver does.)
+            raise ValueError(
+                f"step {t - 1} exceeds the tree horizon 2^depth-1 = "
+                f"{(1 << self.depth) - 1}; raise depth (or set "
+                "restart_every) to cover the run")
+        t_hi = t
+        if self.completion:
+            # last step of the epoch: advance the prefix to the completed
+            # tree so the FTRL restart rebases on single-root-node noise
+            t_hi = jnp.where(t == self.restart_every,
+                             next_pow2(self.restart_every), t)
         out = {}
         for path, g in flat_grads.items():
             if sigma > 0.0:
-                delta = (self.prefix_noise(path, g.shape, t)
-                         - self.prefix_noise(path, g.shape, t - 1))
-                g = g + (sigma * sensitivity) * delta.astype(g.dtype)
+                delta = (self.prefix_noise(path, g.shape, t_hi, epoch=epoch)
+                         - self.prefix_noise(path, g.shape, t - 1, epoch=epoch))
+                g = g + (sigma * _scale_for(sensitivity, path)) * delta.astype(
+                    g.dtype)
             out[path] = g / denom
         return out
 
@@ -135,10 +212,18 @@ NOISE_MECHANISMS = {
 }
 
 
-def get_mechanism(name: str, seed: int = 0, depth: int = 0):
+def get_mechanism(name: str, seed: int = 0, depth: int | None = None,
+                  restart_every: int = 0, completion: bool = False):
+    """Build a registered mechanism. ``depth`` None/0 means "the mechanism's
+    own default" (TreeAggregationMechanism keeps its 30) — the argument is a
+    pass-through, never a clobber."""
     try:
         cls = NOISE_MECHANISMS[name]
     except KeyError:
         raise ValueError(f"unknown noise mechanism {name!r}; options: "
                          f"{sorted(NOISE_MECHANISMS)}")
-    return cls(seed=seed, depth=depth) if depth else cls(seed=seed)
+    kw = {"seed": seed, "restart_every": restart_every,
+          "completion": completion}
+    if depth:  # 0/None -> keep the class default (regression: a depth-0 tree)
+        kw["depth"] = depth
+    return cls(**kw)

@@ -3,15 +3,26 @@
 A policy is an ordered list of :class:`ParamGroup` rules matched against the
 flattened param tree (first match wins). Each group carries its own clipping
 fn + threshold R, a norm *scope*, an optional ghost-vs-direct override for
-``kernels.dispatch``, and a trainable flag:
+``kernels.dispatch``, a noise scale, and a trainable flag:
 
   scope='flat'   the group joins the shared flat pool: ONE per-sample norm
                  over every flat-scope param, one clip factor (classic
                  Abadi-style clipping; all flat groups must agree on
-                 clipping/R/gamma).
+                 clipping/R/gamma/sigma_scale).
   scope='group'  the group is its own clipping unit: its own per-sample norm
                  ||g_i^(g)||, its own C_i^(g) = clip(||g_i^(g)||; R_g)
                  (group-wise clipping, He et al. 2022 / Bu et al. 2023).
+  sigma_scale    heterogeneous per-group noise: the noise std on this
+                 group's coordinates is sigma * sigma_scale * S where S is
+                 the composed sensitivity below. The default 1.0 reproduces
+                 the flat scheme (every coordinate at sigma * S) exactly;
+                 scale < 1 under-noises a group relative to flat — e.g.
+                 sigma_scale = R_g / S gives noise proportional to the
+                 group's OWN sensitivity. Accounting must then compose the
+                 per-group Gaussian curves jointly
+                 (``accounting.compute_epsilon`` with
+                 ``ResolvedPolicy.noise_multipliers()``) — the single-sigma
+                 SGM bound no longer applies.
   trainable=False
                  the LoRA fast path: the group's params are closed over as
                  constants — no tap differentiation, no norm, no weighted
@@ -19,8 +30,8 @@ fn + threshold R, a norm *scope*, an optional ghost-vs-direct override for
 
 The L2 sensitivity of one sample's clipped contribution composes as
 sqrt(R_flat^2 + sum_g R_g^2) over the non-empty trainable units
-(``accounting.compose_sensitivity``); the noise mechanism scales by that
-instead of a bare R.
+(``accounting.compose_sensitivity``); the noise mechanism scales each
+group's leaves by sigma_scale_g times that.
 
 A bare :class:`repro.core.bk.DPConfig` lowers to a single-group flat policy
 via :func:`as_policy`, so every pre-policy call site runs unchanged.
@@ -51,6 +62,7 @@ class ParamGroup:
     gamma: float = 0.01              # automatic-clipping stability constant
     trainable: bool = True           # False = frozen (no taps / grads / noise)
     method: str = ""                 # '' | 'ghost' | 'direct' dispatch override
+    sigma_scale: float = 1.0         # noise std multiplier vs the flat scheme
 
     def __post_init__(self):
         if self.scope not in SCOPES:
@@ -59,6 +71,10 @@ class ParamGroup:
         if self.method not in METHODS:
             raise ValueError(f"group {self.name!r}: method must be one of "
                              f"{METHODS}, got {self.method!r}")
+        if self.sigma_scale <= 0.0:
+            raise ValueError(f"group {self.name!r}: sigma_scale must be > 0 "
+                             f"(got {self.sigma_scale}); use trainable=False "
+                             "to exempt params from noise")
 
     def matches(self, path: str) -> bool:
         if path == self.match or path.startswith(self.match + "/"):
@@ -83,6 +99,10 @@ class PrivacyPolicy:
     noise_seed: int = 0              # node-noise seed for stateful mechanisms
     noise_depth: int = 0             # tree depth (0 = mechanism default; set
                                      # ceil(log2(steps+1)) to cut draw cost)
+    noise_restart_every: int = 0     # tree epoch restarts, in steps (0 = off;
+                                     # key it off the FTRL optimizer's
+                                     # restart_every so both reset together)
+    noise_completion: bool = False   # honest-restart (Honaker) completion
     use_kernels: bool = True         # fused Pallas kernels via kernels.dispatch
 
     def __post_init__(self):
@@ -91,11 +111,26 @@ class PrivacyPolicy:
         names = [g.name for g in self.groups]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate group names: {names}")
+        if (self.noise_restart_every or self.noise_completion) \
+                and self.noise != "tree":
+            # GaussianMechanism would silently ignore both knobs — per-step
+            # independent noise has no tree to restart or complete
+            raise ValueError(
+                "noise_restart_every/noise_completion require noise='tree' "
+                f"(got noise={self.noise!r})")
+        if self.noise_completion and self.noise_restart_every <= 0:
+            # fail at config time, not at the first training-step trace
+            raise ValueError(
+                "noise_completion corrects the noise at epoch boundaries — "
+                "set noise_restart_every > 0 (the optimizer's restart "
+                "period) alongside it")
 
     def mechanism(self):
         from repro.core.noise import get_mechanism
         return get_mechanism(self.noise, seed=self.noise_seed,
-                             depth=self.noise_depth)
+                             depth=self.noise_depth,
+                             restart_every=self.noise_restart_every,
+                             completion=self.noise_completion)
 
     def group_for(self, path: str) -> ParamGroup:
         for g in self.groups:
@@ -124,6 +159,7 @@ class ClipUnit:
     R: float
     gamma: float
     paths: tuple                     # member param paths (sorted)
+    sigma_scale: float = 1.0         # noise std multiplier vs the flat scheme
 
     def clip_fn(self) -> Callable:
         kw = {"gamma": self.gamma} if self.clipping == "automatic" else {}
@@ -142,6 +178,27 @@ class ResolvedPolicy:
 
     def method_for(self, path: str) -> str:
         return self.group_of[path].method
+
+    @property
+    def heterogeneous(self) -> bool:
+        return any(u.sigma_scale != 1.0 for u in self.units)
+
+    def noise_scales(self) -> dict:
+        """Per-trainable-path noise std multiplier on sigma:
+        sigma_scale_u * composed sensitivity. All scales 1.0 (the default)
+        reproduces the flat scheme's sigma * S on every leaf exactly."""
+        return {p: self.units[u].sigma_scale * self.sensitivity
+                for p, u in self.unit_of.items()}
+
+    def noise_multipliers(self) -> list:
+        """Per-unit effective Gaussian noise multipliers relative to each
+        unit's OWN sensitivity R_u — the quantity privacy accounting
+        composes (feed to ``accounting.compute_epsilon`` as a sequence).
+        With every sigma_scale at 1.0 the joint bound coincides with the
+        flat single-sigma SGM bound."""
+        sigma = self.policy.sigma
+        return [sigma * u.sigma_scale * self.sensitivity / u.R
+                for u in self.units]
 
 
 def resolve_policy(policy: PrivacyPolicy, param_paths) -> ResolvedPolicy:
@@ -170,12 +227,14 @@ def resolve_policy(policy: PrivacyPolicy, param_paths) -> ResolvedPolicy:
                    if g.trainable and g.scope == "flat" and members[g.name]]
     for g in flat_groups[1:]:
         ref = flat_groups[0]
-        if (g.clipping, g.R, g.gamma) != (ref.clipping, ref.R, ref.gamma):
+        if (g.clipping, g.R, g.gamma, g.sigma_scale) != \
+                (ref.clipping, ref.R, ref.gamma, ref.sigma_scale):
             raise ValueError(
                 "flat-scope groups share ONE norm pool and so must agree on "
-                f"(clipping, R, gamma): {ref.name!r} has "
-                f"{(ref.clipping, ref.R, ref.gamma)}, {g.name!r} has "
-                f"{(g.clipping, g.R, g.gamma)}")
+                f"(clipping, R, gamma, sigma_scale): {ref.name!r} has "
+                f"{(ref.clipping, ref.R, ref.gamma, ref.sigma_scale)}, "
+                f"{g.name!r} has "
+                f"{(g.clipping, g.R, g.gamma, g.sigma_scale)}")
 
     units, unit_of = [], {}
     if flat_groups:
@@ -183,13 +242,13 @@ def resolve_policy(policy: PrivacyPolicy, param_paths) -> ResolvedPolicy:
         paths = sorted(p for g in flat_groups for p in members[g.name])
         name = ref.name if len(flat_groups) == 1 else "flat"
         units.append(ClipUnit(name, ref.clipping, ref.R, ref.gamma,
-                              tuple(paths)))
+                              tuple(paths), ref.sigma_scale))
         for p in paths:
             unit_of[p] = 0
     for g in policy.groups:
         if g.trainable and g.scope == "group" and members[g.name]:
             units.append(ClipUnit(g.name, g.clipping, g.R, g.gamma,
-                                  tuple(members[g.name])))
+                                  tuple(members[g.name]), g.sigma_scale))
             for p in members[g.name]:
                 unit_of[p] = len(units) - 1
 
@@ -226,11 +285,15 @@ def norm_aux(res: ResolvedPolicy, losses, sq, unit_norms, unit_C) -> dict:
 
 def finalize_noise(policy: PrivacyPolicy, res: ResolvedPolicy,
                    flat_sums: dict, rng, denom: float, step=None) -> dict:
-    """Phase 4 shared by every implementation: the policy's noise mechanism
-    over the trainable leaves (sigma * sensitivity scale), frozen leaves pass
-    through untouched (they are zeros)."""
+    """Phase 4 shared by every implementation (all 8 BK/baseline modes route
+    here): the policy's noise mechanism over the trainable leaves, each leaf
+    scaled by its unit's sigma_scale * composed sensitivity (a homogeneous
+    policy passes the bare composed sensitivity — bitwise-identical to the
+    pre-heterogeneous behaviour). Frozen leaves pass through untouched (they
+    are zeros)."""
     active = {p: g for p, g in flat_sums.items() if p not in res.frozen}
-    out = policy.mechanism().add(active, rng, policy.sigma, res.sensitivity,
+    scales = res.noise_scales() if res.heterogeneous else res.sensitivity
+    out = policy.mechanism().add(active, rng, policy.sigma, scales,
                                  denom, step=step)
     for p, g in flat_sums.items():
         if p in res.frozen:

@@ -24,7 +24,7 @@ from repro.configs.base import SHAPES            # noqa: E402
 from repro.configs.registry import get_config, list_archs  # noqa: E402
 from repro.launch.mesh import make_production_mesh          # noqa: E402
 from repro.launch.steps import plan_cell, skip_reason       # noqa: E402
-from repro.utils.hlo import analyze_hlo                     # noqa: E402
+from repro.utils.hlo import analyze_hlo, xla_cost_analysis  # noqa: E402
 
 OUT_ROOT = os.path.join(os.path.dirname(__file__), "../../../experiments/dryrun")
 
@@ -61,7 +61,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
                 "temp_bytes": ma.temp_size_in_bytes,
                 "peak_bytes": getattr(ma, "peak_memory_in_bytes", 0),
             }
-            ca = compiled.cost_analysis() or {}
+            ca = xla_cost_analysis(compiled)
             rec["cost"] = {k: ca[k] for k in ("flops", "bytes accessed")
                            if k in ca}
             # trip-aware totals (XLA cost_analysis counts scan bodies once)

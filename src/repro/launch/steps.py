@@ -11,8 +11,9 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
-from repro.configs.registry import build, get_config
+from repro.configs.registry import build, get_config, get_policy, has_policy
 from repro.core.bk import DPConfig
+from repro.core.policy import as_policy
 from repro.data.synthetic import batch_spec
 from repro.launch import sharding as sh
 from repro.optim.accumulate import accumulated_private_grad
@@ -74,9 +75,12 @@ def _params_struct(model):
     return jax.eval_shape(model.init, _key_struct())
 
 
-def plan_cell(arch: str, shape_name: str, mesh, dp: Optional[DPConfig] = None,
+def plan_cell(arch: str, shape_name: str, mesh, dp=None,
               microbatch: Optional[int] = None, cfg_patch: Optional[dict] = None,
               optimizer: Optional[str] = None) -> CellPlan:
+    """``dp`` is a DPConfig, a PrivacyPolicy, or None — None picks the
+    arch's registered policy preset when one exists (group-wise planning),
+    else the flat bk-mixopt DPConfig."""
     cfg = get_config(arch)
     if cfg_patch:
         cfg = cfg.with_(**cfg_patch)
@@ -91,7 +95,14 @@ def plan_cell(arch: str, shape_name: str, mesh, dp: Optional[DPConfig] = None,
 
     if shape.kind == "train":
         # bk-mixopt IS the paper's algorithm at T=4096 (§3: large-T needs the
-        # layerwise hybrid; base-BK's 2BT^2 Grams are the wrong branch here)
+        # layerwise hybrid; base-BK's 2BT^2 Grams are the wrong branch here).
+        # When the arch registers a PrivacyPolicy preset the dryrun grid
+        # plans THAT (group-wise norm accumulators + per-unit clip factors
+        # change the book-keeping HBM), not a flat DPConfig.
+        policy_tag = ""
+        if dp is None and has_policy(arch):
+            dp = get_policy(arch, mode="bk-mixopt", sigma=1.0)
+            policy_tag = f" policy={arch}({len(dp.groups)}g)"
         dp = dp or DPConfig(mode="bk-mixopt", clipping="automatic", sigma=1.0)
         mb = microbatch or TRAIN_MICROBATCH.get(arch, 16)
         opt_name = optimizer or TRAIN_OPTIMIZER.get(arch, "adamw")
@@ -113,7 +124,8 @@ def plan_cell(arch: str, shape_name: str, mesh, dp: Optional[DPConfig] = None,
             (params, ostate, jax.ShapeDtypeStruct((), jnp.int32), bspec,
              _key_struct()),
             (psh, osh, None, bsh, None), donate=(0, 1),
-            note=f"dp={dp.mode} micro={mb} opt={opt_name}")
+            note=f"dp={as_policy(dp).mode} micro={mb} opt={opt_name}"
+                 f"{policy_tag}")
 
     if shape.kind == "prefill":
         bspec = batch_spec(cfg, shape.global_batch, shape.seq_len,

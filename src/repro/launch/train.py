@@ -11,6 +11,12 @@ step the driver can autotune the fused-kernel block sizes for the model's
 actual tap shapes (``--autotune``, measured via kernels.dispatch.autotune and
 pinned with override_blocks).
 
+``--optimizer ftrl`` trains with momentum DP-FTRL: the policy's noise
+mechanism is switched to binary-tree aggregation (depth sized to the run's
+horizon), ``--restart-every N`` restarts both the optimizer anchor and the
+noise tree every N steps, and ``--tree-completion`` applies the
+honest-restart variance correction at each boundary.
+
 Runs on whatever devices exist (CPU here, a pod via the same pjit path on
 TPU — pass --mesh data,model sizes)."""
 from __future__ import annotations
@@ -189,10 +195,89 @@ def train(model_cfg, tc: TrainConfig, dp, log=print,
                             dataset_size, tc.steps * tc.global_batch / dataset_size)
         dp = dataclasses.replace(dp, sigma=budget.sigma)
         log(f"calibrated sigma={budget.sigma:.3f} for eps={budget.epsilon:.2f}")
+        if any(g.sigma_scale != 1.0 for g in policy.groups):
+            log("WARNING: sigma was calibrated with the FLAT single-sigma "
+                "accountant, but this policy sets per-group sigma_scale — "
+                "the true joint-bound epsilon differs (larger when any "
+                "scale < 1). Re-check with compute_epsilon("
+                "resolved.noise_multipliers(), ...) (README 'Accounting "
+                "caveats').")
 
+    if tc.optimizer != "ftrl" and (tc.restart_every or tc.tree_completion
+                                   or tc.ftrl_momentum):
+        # silently ignoring these would leave the user believing they
+        # configured tree restarts while plain gaussian noise runs
+        raise ValueError(
+            "--restart-every/--tree-completion/--ftrl-momentum are DP-FTRL "
+            f"knobs; pass --optimizer ftrl (got {tc.optimizer!r})")
+    if tc.tree_completion and tc.restart_every <= 0:
+        raise ValueError("--tree-completion corrects the noise at epoch "
+                         "boundaries; pass --restart-every N (> 0) with it")
+    if tc.optimizer == "ftrl" and tc.lr_schedule != "constant":
+        log(f"WARNING: FTRL rescales the WHOLE gradient prefix by the "
+            f"current lr — a decaying schedule ({tc.lr_schedule!r}) drags "
+            "the iterate back toward its anchor and undoes most of "
+            "training. Use lr_schedule='constant' (the CLI driver forces "
+            "it for --optimizer ftrl).")
+    ftrl_restart = tc.restart_every
+    if tc.optimizer == "ftrl" and policy.mode != "nonprivate":
+        # FTRL consumes the NOISY GRADIENT PREFIX: switch the policy to the
+        # tree-aggregation mechanism with depth sized to the actual horizon
+        # so each add() pays only what it needs. A policy that already
+        # configures tree noise keeps its own knobs (never silently
+        # overridden); either way the optimizer anchor and the noise tree
+        # must restart at the SAME boundary, so conflicts are an error.
+        from repro.core.noise import next_pow2
+        pol = as_policy(dp)
+        pol_tree = pol.noise == "tree"
+        if pol_tree and pol.noise_restart_every and tc.restart_every and \
+                pol.noise_restart_every != tc.restart_every:
+            raise ValueError(
+                f"policy sets noise_restart_every={pol.noise_restart_every} "
+                f"but --restart-every={tc.restart_every}: the FTRL anchor "
+                "and the noise tree must restart together")
+        ftrl_restart = tc.restart_every or \
+            (pol.noise_restart_every if pol_tree else 0)
+        completion = tc.tree_completion or \
+            (pol.noise_completion if pol_tree else False)
+        horizon = ftrl_restart if ftrl_restart > 0 else tc.steps
+        depth = (pol.noise_depth if pol_tree and pol.noise_depth
+                 else max(next_pow2(horizon).bit_length(), 1))
+        dp = dataclasses.replace(pol, noise="tree", noise_depth=depth,
+                                 noise_restart_every=ftrl_restart,
+                                 noise_completion=completion)
+        policy = dp
+        log(f"DP-FTRL: tree noise depth={policy.noise_depth} "
+            f"restart_every={ftrl_restart or 'never'} "
+            f"completion={completion}")
+        if target_epsilon > 0:
+            log("WARNING: sigma was calibrated with the subsampled-Gaussian "
+                "(amplification) accountant, which does NOT apply to "
+                "DP-FTRL's tree-noise release — the logged epsilon is "
+                "optimistic for this run. Calibrate sigma with a "
+                "tree-aggregation accountant instead (README 'Accounting "
+                "caveats'; ROADMAP follow-up).")
+
+    # validate the tree horizon upfront for EVERY optimizer: inside the
+    # jitted step the index is traced, so the mechanism's own concrete-step
+    # guard can never fire — past 2^depth - 1 the prefix would collapse and
+    # increments would subtract released noise with no error
+    final_policy = as_policy(dp)
+    if final_policy.noise == "tree" and final_policy.noise_depth and \
+            not final_policy.noise_restart_every and \
+            tc.steps > (1 << final_policy.noise_depth) - 1:
+        raise ValueError(
+            f"noise_depth={final_policy.noise_depth} covers only "
+            f"{(1 << final_policy.noise_depth) - 1} steps but the run has "
+            f"{tc.steps}; raise noise_depth or set restarts")
+    final_policy.mechanism()  # surface mechanism config errors before init
+
+    opt_kw = ({"momentum": tc.ftrl_momentum,
+               "restart_every": ftrl_restart}
+              if tc.optimizer == "ftrl" else {})
     opt = make_optimizer(tc.optimizer,
                          make_schedule(tc.lr_schedule, tc.lr, tc.warmup, tc.steps),
-                         weight_decay=tc.weight_decay)
+                         weight_decay=tc.weight_decay, **opt_kw)
     pipe = Pipeline(model_cfg, PipelineConfig(tc.global_batch, tc.seq_len,
                                               seed=tc.seed))
 
@@ -269,7 +354,17 @@ def main():
     ap.add_argument("--microbatch", type=int, default=0)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=3e-4)
-    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--optimizer", default="adamw",
+                    help="sgd | adamw | lamb | adafactor | ftrl (DP-FTRL: "
+                         "tree-aggregation noise, prefix-sum iterate)")
+    ap.add_argument("--ftrl-momentum", type=float, default=0.0,
+                    help="DP-FTRL momentum over noisy gradient prefixes")
+    ap.add_argument("--restart-every", type=int, default=0,
+                    help="DP-FTRL epoch restart period in steps (0 = never); "
+                         "restarts the optimizer anchor AND the noise tree")
+    ap.add_argument("--tree-completion", action="store_true",
+                    help="Honaker completion: advance each epoch's tree to "
+                         "the next power of two before restarting")
     ap.add_argument("--mode", default="bk-mixopt")
     ap.add_argument("--clipping", default="automatic")
     ap.add_argument("--sigma", type=float, default=0.0)
@@ -292,6 +387,13 @@ def main():
     tc = TrainConfig(global_batch=args.batch, microbatch=args.microbatch,
                      seq_len=args.seq, steps=args.steps, lr=args.lr,
                      optimizer=args.optimizer,
+                     # FTRL rescales the whole prefix by lr_t: decay would
+                     # pull the iterate back toward the anchor
+                     lr_schedule=("constant" if args.optimizer == "ftrl"
+                                  else TrainConfig.lr_schedule),
+                     ftrl_momentum=args.ftrl_momentum,
+                     restart_every=args.restart_every,
+                     tree_completion=args.tree_completion,
                      policy=args.policy, autotune=args.autotune,
                      checkpoint_dir=args.ckpt_dir,
                      checkpoint_every=args.ckpt_every)

@@ -164,7 +164,12 @@ class TransformerLM:
         params = {
             "embed": L.embedding_init(ks[0], cfg.vocab, cfg.d_model, dt),
             "final_norm": NORMS[cfg.norm][0](ks[1], cfg.d_model, dt),
-            "head": L.linear_init(ks[2], cfg.d_model, cfg.vocab, dt),
+            # mu-P-style small readout: standard-scale head init puts ~1
+            # nat of logit-variance penalty on the initial loss, which
+            # swamps the first hundred steps' progress; 0.1x starts the
+            # model at ~ln(vocab) so early learning is visible in the loss
+            "head": L.linear_init(ks[2], cfg.d_model, cfg.vocab, dt,
+                                  scale=0.1 / math.sqrt(cfg.d_model)),
         }
         if cfg.first_k_dense:
             dense_keys = jax.random.split(ks[3], cfg.first_k_dense)

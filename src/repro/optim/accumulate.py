@@ -2,8 +2,10 @@
 batch determines accuracy and privacy accounting; the PHYSICAL (micro) batch
 only determines memory. Per-sample clipping happens inside each microbatch;
 the clipped sums accumulate across microbatches in a lax.scan; noise is added
-ONCE per logical batch via the policy's mechanism (sigma * composed
-sensitivity). Accepts a DPConfig or a PrivacyPolicy."""
+ONCE per logical batch via the policy's mechanism (per clip unit:
+sigma * sigma_scale_u * composed sensitivity; tree-aggregation increments
+when the policy runs DP-FTRL noise — ``step`` threads through for that).
+Accepts a DPConfig or a PrivacyPolicy."""
 from __future__ import annotations
 
 import jax

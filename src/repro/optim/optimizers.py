@@ -156,13 +156,19 @@ def adafactor(lr_fn, decay: float = 0.8, eps: float = 1e-30,
 
 
 # ----------------------------------------------------------------- registry
-def make_optimizer(name: str, lr_fn, weight_decay: float = 0.0) -> Optimizer:
+def make_optimizer(name: str, lr_fn, weight_decay: float = 0.0,
+                   **kw) -> Optimizer:
+    """``kw`` passes optimizer-specific knobs through (e.g. DP-FTRL's
+    ``momentum`` / ``restart_every``)."""
     if name == "sgd":
-        return sgd(lr_fn, weight_decay=weight_decay)
+        return sgd(lr_fn, weight_decay=weight_decay, **kw)
     if name == "adamw":
-        return adamw(lr_fn, weight_decay=weight_decay)
+        return adamw(lr_fn, weight_decay=weight_decay, **kw)
     if name == "lamb":
-        return lamb(lr_fn, weight_decay=weight_decay)
+        return lamb(lr_fn, weight_decay=weight_decay, **kw)
     if name == "adafactor":
-        return adafactor(lr_fn, weight_decay=weight_decay)
+        return adafactor(lr_fn, weight_decay=weight_decay, **kw)
+    if name == "ftrl":
+        from repro.optim.ftrl import ftrl
+        return ftrl(lr_fn, weight_decay=weight_decay, **kw)
     raise ValueError(f"unknown optimizer {name!r}")

@@ -284,6 +284,16 @@ class HloAnalysis:
                 "collectives": coll}
 
 
+def xla_cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized across jax versions: older
+    releases return one dict, newer ones a one-element list of per-program
+    dicts (and either may be empty). Always returns a plain dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca or {})
+
+
 def analyze_hlo(hlo_text: str) -> dict:
     return HloAnalysis(hlo_text).totals()
 

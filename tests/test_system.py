@@ -66,7 +66,7 @@ def test_generate_roundtrip():
 
 
 def test_hlo_analyzer_trip_counts():
-    from repro.utils.hlo import analyze_hlo
+    from repro.utils.hlo import analyze_hlo, xla_cost_analysis
     D, L = 64, 8
 
     def f(params, x0):
@@ -80,7 +80,29 @@ def test_hlo_analyzer_trip_counts():
     t = analyze_hlo(co.as_text())
     assert abs(t["flops"] - 2 * D**3 * L) / (2 * D**3 * L) < 1e-6
     # XLA's own analysis undercounts by the trip count
-    assert co.cost_analysis()["flops"] < t["flops"]
+    assert xla_cost_analysis(co)["flops"] < t["flops"]
+
+
+def test_xla_cost_analysis_normalizes_both_shapes():
+    """cost_analysis() returns a dict on older jax, [dict] on newer — the
+    helper must take both (and tolerate empties)."""
+    from repro.utils.hlo import xla_cost_analysis
+
+    class Dict:
+        def cost_analysis(self):
+            return {"flops": 7.0}
+
+    class List:
+        def cost_analysis(self):
+            return [{"flops": 7.0}]
+
+    class Empty:
+        def cost_analysis(self):
+            return []
+
+    assert xla_cost_analysis(Dict()) == {"flops": 7.0}
+    assert xla_cost_analysis(List()) == {"flops": 7.0}
+    assert xla_cost_analysis(Empty()) == {}
 
 
 def test_sharding_rules_sanitize():
