@@ -1,0 +1,150 @@
+"""Step-level train benchmark: the REAL jitted, donated, mesh-lowered train
+step (launch.steps.make_train_step) per (dp mode x device count).
+
+    PYTHONPATH=src python -m benchmarks.step_bench [--fast]
+    PYTHONPATH=src python -m benchmarks.step_bench --cell bk-mixopt 8 [--fast]
+
+The parent process spawns one subprocess per device count (XLA_FLAGS'
+--xla_force_host_platform_device_count must be set before jax imports), and
+merges the per-cell records into ``BENCH_step.json``:
+
+  steps_per_s / tokens_per_s   measured wall time over ``steps`` donated
+                               steps (after one compile+warmup call);
+  peak_hbm_bytes               compiled.memory_analysis(): per-device
+                               argument + output + temp bytes (and XLA's own
+                               peak estimate when the backend reports one);
+  cost                         utils.hlo.xla_cost_analysis(compiled) —
+                               flops / bytes accessed per device.
+
+On CPU the wall numbers are correctness-path (Pallas interpret mode), not a
+TPU projection — the tracked signal is the per-device memory trajectory
+(sharded state + slice-sized noise vs replicated) and the mode-vs-mode /
+1-vs-N-device ratios. Kernel microbenches live in kernel_bench.py; this file
+is the end-to-end step truth the perf trajectory was missing.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+MODES = ("nonprivate", "bk-mixopt")
+DEVICE_COUNTS = (1, 8)
+OUT = "BENCH_step.json"
+
+
+def run_cell(mode: str, ndev: int, fast: bool) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.registry import build, smoke_config
+    from repro.core.bk import DPConfig
+    from repro.data.pipeline import Pipeline, PipelineConfig
+    from repro.launch.mesh import make_train_mesh
+    from repro.launch.steps import TrainState, make_train_step
+    from repro.optim.optimizers import make_optimizer
+    from repro.utils.hlo import xla_cost_analysis
+
+    assert len(jax.devices()) >= ndev, (len(jax.devices()), ndev)
+    B, T, steps = (8, 32, 3) if fast else (16, 64, 10)
+    cfg = smoke_config("qwen2-1.5b").with_(dtype="float32",
+                                           param_dtype="float32")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = make_optimizer("adamw", lambda s: jnp.asarray(1e-3, jnp.float32))
+    dp = DPConfig(mode=mode, sigma=0.0 if mode == "nonprivate" else 0.5)
+    mesh = make_train_mesh(ndev, 1)
+    pipe = Pipeline(cfg, PipelineConfig(B, T, seed=0))
+
+    step_fn, state_sh, batch_sh = make_train_step(
+        model.apply, params, opt, "adamw", dp, 0, mesh, pipe.batch(0))
+    jitted = jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, None), donate_argnums=(0,))
+    state = TrainState(params=jax.device_put(params, state_sh.params),
+                       opt_state=jax.device_put(opt.init(params),
+                                                state_sh.opt_state),
+                       step=jnp.asarray(0, jnp.int32),
+                       rng=jax.random.PRNGKey(1))
+    batch = jax.device_put(pipe.batch(0), batch_sh)
+
+    # drive the lowered executable directly: jitted() after lower().compile()
+    # would pay a SECOND full XLA compilation (lower() bypasses the jit
+    # dispatch cache), doubling each cell's wall time on CPU
+    compiled = jitted.lower(state, batch).compile()
+    ma = compiled.memory_analysis()
+    ca = xla_cost_analysis(compiled)
+
+    state, loss = compiled(state, batch)        # warmup (donates like jitted)
+    jax.block_until_ready(loss)
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        state, loss = compiled(state, batch)
+    jax.block_until_ready(loss)
+    elapsed = time.perf_counter() - t0
+
+    return {
+        "mode": mode, "devices": ndev, "mesh": dict(mesh.shape),
+        "backend": jax.default_backend(),
+        "interpret_kernels": jax.default_backend() != "tpu",
+        "batch": B, "seq": T, "steps": steps,
+        "steps_per_s": steps / elapsed,
+        "tokens_per_s": B * T * steps / elapsed,
+        "final_loss": float(loss),
+        "peak_hbm_bytes": {
+            "argument": ma.argument_size_in_bytes,
+            "output": ma.output_size_in_bytes,
+            "temp": ma.temp_size_in_bytes,
+            "peak": getattr(ma, "peak_memory_in_bytes", 0),
+            "total": (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                      + ma.temp_size_in_bytes),
+        },
+        "cost": {k: ca[k] for k in ("flops", "bytes accessed") if k in ca},
+    }
+
+
+def main(argv) -> int:
+    fast = "--fast" in argv
+    if "--cell" in argv:
+        i = argv.index("--cell")
+        mode, ndev = argv[i + 1], int(argv[i + 2])
+        print("CELL_JSON " + json.dumps(run_cell(mode, ndev, fast)))
+        return 0
+
+    cells = []
+    for ndev in DEVICE_COUNTS:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                            + f" --xla_force_host_platform_device_count={ndev}"
+                            ).strip()
+        env["PYTHONPATH"] = "src" + (os.pathsep + env["PYTHONPATH"]
+                                     if env.get("PYTHONPATH") else "")
+        for mode in MODES:
+            cmd = [sys.executable, "-m", "benchmarks.step_bench",
+                   "--cell", mode, str(ndev)] + (["--fast"] if fast else [])
+            r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                               timeout=1800)
+            line = next((ln for ln in r.stdout.splitlines()
+                         if ln.startswith("CELL_JSON ")), None)
+            if r.returncode != 0 or line is None:
+                print(f"[ERR ] {mode} x {ndev}dev:\n{r.stdout[-800:]}"
+                      f"{r.stderr[-2000:]}")
+                return 1
+            cell = json.loads(line[len("CELL_JSON "):])
+            cells.append(cell)
+            hbm = cell["peak_hbm_bytes"]["total"] / 2**20
+            print(f"[ok] {mode:>11} x {ndev}dev  "
+                  f"{cell['tokens_per_s']:>8.0f} tok/s  "
+                  f"{cell['steps_per_s']:>6.2f} steps/s  "
+                  f"hbm/dev {hbm:>7.1f} MiB")
+
+    out = {"backend": cells[0]["backend"], "fast": fast, "cells": cells}
+    with open(OUT, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {OUT} ({len(cells)} cells)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -29,6 +29,34 @@ def _ckpt_dir(root: str, step: int) -> str:
     return os.path.join(root, f"step_{step:010d}")
 
 
+def host_snapshot(state: dict) -> dict:
+    """Synchronous device->host copy of a pytree (global arrays gathered).
+
+    The copy-before-donate contract: the train loop donates the whole
+    TrainState into every jitted step, so any ASYNC reader (the checkpoint
+    writer thread) must work from a host copy taken BEFORE the next step is
+    dispatched — reading a donated jax.Array raises (or worse, on a runtime
+    without the guard, reads reused memory). Blocks until the values are
+    ready, which also bounds how far the loop can run ahead of the
+    checkpoint cadence.
+
+    The device-side copy is load-bearing: on the CPU backend a host view of
+    a jax.Array is ZERO-COPY and gets CACHED on the array, pinning its
+    buffer with an external reference for the array's remaining lifetime —
+    the runtime then (correctly) refuses to donate it, silently costing a
+    full state copy inside every subsequent step. Copying on device first
+    makes the host view alias the throwaway copy instead; the original
+    state stays donation-clean."""
+    import jax.numpy as jnp
+    flat = flatten(state)
+    out = {}
+    for k, v in flat.items():
+        if isinstance(v, jax.Array):
+            v = jnp.array(v)    # fresh buffer; the host view caches here
+        out[k] = np.asarray(jax.device_get(v))
+    return unflatten(out)
+
+
 def save(root: str, step: int, state: dict, keep: int = 3) -> str:
     """Atomically persist a pytree; returns the checkpoint path."""
     os.makedirs(root, exist_ok=True)

@@ -82,6 +82,14 @@ class TrainConfig:
     restart_every: int = 0
     tree_completion: bool = False
     seed: int = 0
+    # mesh for the real train driver: (data, model) axis sizes; data=0 means
+    # "all devices / model" (launch.mesh.make_train_mesh)
+    mesh_data: int = 0
+    mesh_model: int = 1
+    # loss/timing log + device->host flush period in steps: the loop keeps
+    # losses on device and drains them every log_every steps (and at exit),
+    # so no step blocks on a host sync
+    log_every: int = 10
     checkpoint_every: int = 0
     checkpoint_dir: str = ""
     keep_checkpoints: int = 3

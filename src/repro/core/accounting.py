@@ -132,6 +132,81 @@ class PrivacyBudget:
     sigma: float
     sample_rate: float
     steps: int
+    mechanism: str = "sgm"       # 'sgm' (subsampled Gaussian) | 'tree'
+
+
+# ------------------------------------------------- tree-aggregation accountant
+def tree_node_count(steps: int, restart_every: int = 0,
+                    participations: int = 1) -> int:
+    """Max number of released tree nodes one sample's contributions touch.
+
+    DP-FTRL (Kairouz et al. 2021) releases every binary-tree node sum, each
+    perturbed with N(0, (sigma*S)^2). Each of a sample's ``participations``
+    (its TOTAL appearances across the whole run — the number of data passes)
+    lands in one leaf, whose root path touches at most the tree height
+    h = floor(log2(next_pow2(E))) + 1 nodes, so the L2 sensitivity of the
+    node-vector release is sqrt(m) * S with
+
+        m <= participations * h_per_tree
+
+    regardless of how the appearances distribute over restart epochs (paths
+    in distinct trees are disjoint; multiple paths in one tree only overlap
+    near the root, so the product is an upper bound either way). Restarts
+    only shrink h — from the full-run tree's height to the epoch tree's —
+    which is why restart-per-pass is the canonical multi-epoch setup.
+    Honaker completion adds no nodes: the completed nodes are already
+    counted by the full-tree height."""
+    from repro.core.noise import next_pow2
+    if steps <= 0:
+        return 0
+    horizon = restart_every if restart_every and restart_every > 0 else steps
+    height = int(math.log2(next_pow2(horizon))) + 1
+    return height * max(1, participations)
+
+
+def compute_epsilon_tree(sigma: float, steps: int, delta: float,
+                         restart_every: int = 0, participations: int = 1,
+                         orders=DEFAULT_ORDERS) -> float:
+    """(eps, delta) of the DP-FTRL tree-aggregation release.
+
+    The full release (all node sums, each at noise sigma*S) is ONE Gaussian
+    mechanism over a vector with L2 sensitivity sqrt(m)*S where m =
+    ``tree_node_count`` — Gaussian RDP alpha*m/(2 sigma^2), converted with
+    the same Balle et al. machinery as the SGM curve. No sampling assumption
+    and no amplification: the bound holds for arbitrary (adversarial) data
+    order, which is DP-FTRL's point."""
+    if sigma <= 0.0:
+        return float("inf")
+    m = tree_node_count(steps, restart_every, participations)
+    if m == 0:
+        return 0.0
+    orders = np.asarray(orders, dtype=np.float64)
+    rdp = orders * m / (2.0 * sigma * sigma)
+    return rdp_to_eps(rdp, orders, delta)
+
+
+def calibrate_sigma_tree(target_epsilon: float, steps: int, delta: float,
+                         restart_every: int = 0, participations: int = 1,
+                         orders=DEFAULT_ORDERS, tol: float = 1e-3) -> float:
+    """Smallest sigma achieving eps <= target under tree aggregation."""
+    lo, hi = 0.1, 1.0
+    eps = lambda s: compute_epsilon_tree(s, steps, delta, restart_every,
+                                         participations, orders)
+    while eps(hi) > target_epsilon:
+        hi *= 2.0
+        if hi > 1e6:
+            raise ValueError("cannot reach target epsilon")
+    while eps(lo) < target_epsilon:
+        lo /= 2.0
+        if lo < 1e-6:
+            return lo
+    while hi - lo > tol:
+        mid = 0.5 * (lo + hi)
+        if eps(mid) > target_epsilon:
+            lo = mid
+        else:
+            hi = mid
+    return hi
 
 
 def compute_epsilon(sigma, sample_rate: float, steps: int,
@@ -175,10 +250,27 @@ def calibrate_sigma(target_epsilon: float, sample_rate: float, steps: int,
 
 
 def budget_for(target_epsilon: float, delta: float, batch_size: int,
-               dataset_size: int, epochs: float) -> PrivacyBudget:
-    """The PrivacyEngine entry point, mirroring the paper's Sec. 4 API."""
+               dataset_size: int, epochs: float, mechanism: str = "sgm",
+               restart_every: int = 0) -> PrivacyBudget:
+    """The PrivacyEngine entry point, mirroring the paper's Sec. 4 API.
+
+    ``mechanism='sgm'`` (default) calibrates against the subsampled-Gaussian
+    curve — DP-SGD with Poisson-style sampling. ``mechanism='tree'``
+    calibrates against the tree-aggregation release (DP-FTRL: no sampling
+    assumption, no amplification) with the FTRL restart period; the sample's
+    participation count is the number of data passes (>= 1)."""
     q = batch_size / dataset_size
     steps = int(math.ceil(epochs * dataset_size / batch_size))
-    sigma = calibrate_sigma(target_epsilon, q, steps, delta)
-    eps = compute_epsilon(sigma, q, steps, delta)
-    return PrivacyBudget(eps, delta, sigma, q, steps)
+    if mechanism == "tree":
+        participations = max(1, int(math.ceil(epochs)))
+        sigma = calibrate_sigma_tree(target_epsilon, steps, delta,
+                                     restart_every, participations)
+        eps = compute_epsilon_tree(sigma, steps, delta, restart_every,
+                                   participations)
+    elif mechanism == "sgm":
+        sigma = calibrate_sigma(target_epsilon, q, steps, delta)
+        eps = compute_epsilon(sigma, q, steps, delta)
+    else:
+        raise ValueError(f"unknown accounting mechanism {mechanism!r}; "
+                         "options: 'sgm', 'tree'")
+    return PrivacyBudget(eps, delta, sigma, q, steps, mechanism)

@@ -55,7 +55,8 @@ def _unit_sq_norms(flat_grads, res, B, leading_batch: bool):
     return sq
 
 
-def _clip_sum_noise(per_sample_grads, losses, rng, policy, params, B, step):
+def _clip_sum_noise(per_sample_grads, losses, rng, policy, params, B, step,
+                    mesh=None, pspecs=None):
     """Shared tail: per-unit norms -> C^(u) -> weighted sum -> noise.
     per_sample_grads has leading B on every leaf."""
     res = resolve_policy(policy, flatten(params))
@@ -69,7 +70,8 @@ def _clip_sum_noise(per_sample_grads, losses, rng, policy, params, B, step):
         else:
             summed[p] = jnp.einsum("b...,b->...", g.astype(F32),
                                    unit_C[res.unit_of[p]]).astype(g.dtype)
-    summed = finalize_noise(policy, res, summed, rng, float(B), step)
+    summed = finalize_noise(policy, res, summed, rng, float(B), step,
+                            mesh=mesh, pspecs=pspecs)
     return unflatten(summed), norm_aux(res, losses, sq, unit_norms, unit_C)
 
 
@@ -89,7 +91,8 @@ def _unit_weighted_grads(apply_fn, params, batch, res, unit_C):
 
 
 # ----------------------------------------------------------------- baselines
-def nonprivate_grad(apply_fn, params, batch, rng, cfg, step=None):
+def nonprivate_grad(apply_fn, params, batch, rng, cfg, step=None,
+                    mesh=None, pspecs=None):
     policy = as_policy(cfg)
     res = resolve_policy(policy, flatten(params))
 
@@ -105,26 +108,31 @@ def nonprivate_grad(apply_fn, params, batch, rng, cfg, step=None):
     return grads, {"loss": loss}
 
 
-def opacus_grad(apply_fn, params, batch, rng, cfg, step=None):
+def opacus_grad(apply_fn, params, batch, rng, cfg, step=None,
+                mesh=None, pspecs=None):
     """vmap(grad) — instantiates all B per-sample gradients (module 4)."""
     policy = as_policy(cfg)
     B = batch_size_of(batch)
     gfn = jax.grad(lambda p, s: _single(apply_fn, p, s))
     per_g = jax.vmap(gfn, in_axes=(None, 0))(params, batch)
     losses = _loss_all(apply_fn, params, batch)
-    return _clip_sum_noise(per_g, losses, rng, policy, params, B, step)
+    return _clip_sum_noise(per_g, losses, rng, policy, params, B, step,
+                           mesh=mesh, pspecs=pspecs)
 
 
-def tfprivacy_grad(apply_fn, params, batch, rng, cfg, step=None):
+def tfprivacy_grad(apply_fn, params, batch, rng, cfg, step=None,
+                   mesh=None, pspecs=None):
     """B sequential backprops via lax.map (memory-light, slow)."""
     policy = as_policy(cfg)
     B = batch_size_of(batch)
     vg = jax.value_and_grad(lambda p, s: _single(apply_fn, p, s), argnums=0)
     losses, per_g = jax.lax.map(lambda s: vg(params, s), batch)
-    return _clip_sum_noise(per_g, losses, rng, policy, params, B, step)
+    return _clip_sum_noise(per_g, losses, rng, policy, params, B, step,
+                           mesh=mesh, pspecs=pspecs)
 
 
-def fastgradclip_grad(apply_fn, params, batch, rng, cfg, step=None):
+def fastgradclip_grad(apply_fn, params, batch, rng, cfg, step=None,
+                      mesh=None, pspecs=None):
     """Lee & Kifer 2020: per-sample norms (grads discarded), then a second
     backprop of the reweighted loss — one VJP per clip unit."""
     policy = as_policy(cfg)
@@ -138,11 +146,13 @@ def fastgradclip_grad(apply_fn, params, batch, rng, cfg, step=None):
     unit_norms, unit_C = unit_clip_factors(res, sq)
 
     losses, flat = _unit_weighted_grads(apply_fn, params, batch, res, unit_C)
-    flat = finalize_noise(policy, res, flat, rng, float(B), step)
+    flat = finalize_noise(policy, res, flat, rng, float(B), step,
+                          mesh=mesh, pspecs=pspecs)
     return unflatten(flat), norm_aux(res, losses, sq, unit_norms, unit_C)
 
 
-def ghostclip_grad(apply_fn, params, batch, rng, cfg, step=None):
+def ghostclip_grad(apply_fn, params, batch, rng, cfg, step=None,
+                   mesh=None, pspecs=None):
     """Li et al. 2021 / Bu et al. 2022a: ghost norms from a tapped first
     backprop (no per-sample grads), then a second full backprop per unit."""
     policy = as_policy(cfg)
@@ -183,5 +193,6 @@ def ghostclip_grad(apply_fn, params, batch, rng, cfg, step=None):
     unit_norms, unit_C = unit_clip_factors(res, sq)
 
     losses, flat = _unit_weighted_grads(apply_fn, params, batch, res, unit_C)
-    flat = finalize_noise(policy, res, flat, rng, float(B), step)
+    flat = finalize_noise(policy, res, flat, rng, float(B), step,
+                          mesh=mesh, pspecs=pspecs)
     return unflatten(flat), norm_aux(res, losses, sq, unit_norms, unit_C)

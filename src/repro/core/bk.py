@@ -21,6 +21,14 @@ Modes:
   'bk-mixghost'  layerwise ghost-vs-direct for the *norm* only
   'bk-mixopt'    layerwise for norm AND weighted grad (reuses instantiated
                  per-sample grads for module 5 when direct is chosen)
+
+Mesh lowering: every entry point takes an optional ``mesh``. Under a mesh
+whose batch axes divide B, the per-sample record compute stays batch-sharded
+end to end — fused kernels run inside a shard_map on their local batch shard
+(per-sample norms reduce at size B_local and STAY sharded; each weighted
+gradient pays exactly one psum over the batch axes), the jnp paths get
+sharding constraints so GSPMD keeps the same layout, and phase-4 noise is
+generated shard-local (see core.noise.sharded_normal).
 """
 from __future__ import annotations
 
@@ -29,6 +37,7 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import ghost
 from repro.core.clipping import get_clip_fn
@@ -40,6 +49,51 @@ from repro.utils.tree import flatten, unflatten
 F32 = jnp.float32
 
 BK_MODES = ("bk", "bk-mixghost", "bk-mixopt")
+
+
+# ----------------------------------------------------------- mesh lowering
+def mesh_batch_axes(mesh) -> tuple:
+    """Mesh axes the batch dim shards over (mirrors launch.mesh.batch_axes;
+    duplicated here so core never imports launch)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def batch_shard(mesh, B: int):
+    """-> (batch_axes, n_shards) when ``mesh`` can split B, else None."""
+    if mesh is None:
+        return None
+    ba = mesh_batch_axes(mesh)
+    n = 1
+    for a in ba:
+        n *= mesh.shape[a]
+    if n <= 1 or B % n:
+        return None
+    return ba, n
+
+
+def _bspec(ndim: int, bdim: int, ba) -> P:
+    return P(*(ba if i == bdim else None for i in range(ndim)))
+
+
+def _constrain(x, mesh, spec):
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _shard_call(mesh, fn, args, in_specs, out_specs, psum_axes=None):
+    """Run a per-sample kernel batch-sharded: each device computes its local
+    batch slice; ``psum_axes`` reduces sum-typed outputs (weighted grads)
+    once across the batch axes — the single cross-device reduction per clip
+    unit the mesh-lowered step pays."""
+    from jax.experimental.shard_map import shard_map
+    body = fn
+    if psum_axes:
+        body = lambda *a: jax.lax.psum(fn(*a), psum_axes)
+    return shard_map(body, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)(*args)
+
+
+def _local(shape, bdim: int, n: int) -> tuple:
+    return tuple(s // n if i == bdim else s for i, s in enumerate(shape))
 
 
 @dataclass(frozen=True)
@@ -91,7 +145,7 @@ def split_param_paths(params, tap_struct):
 
 # ------------------------------------------------------------- norm dispatch
 def record_sq_norm(key: str, act, ds, mode: str, use_kernels: bool,
-                   method: str = ""):
+                   method: str = "", mesh=None, shard=None):
     """Per-sample squared norm for one tapped op.
 
     Every kind routes through kernels.dispatch: the plan fixes ghost-vs-direct
@@ -100,20 +154,37 @@ def record_sq_norm(key: str, act, ds, mode: str, use_kernels: bool,
     fused Pallas kernel or the jnp einsum runs plus its block sizes. Returns
     (sq_norms (B,), cached) where cached optionally carries the instantiated
     per-sample grads for mixopt reuse in phase 3.
+
+    With ``shard`` = (batch_axes, n) the kernel runs inside a shard_map on
+    its local batch slice (the plan is fitted to the LOCAL shapes, matching
+    what each device executes) and the (B,) norms come back batch-sharded;
+    jnp paths are left to GSPMD.
     """
     from repro.kernels import dispatch
     _, kind, _ = parse_key(key)
+    ba, n = shard if shard else ((), 1)
     if kind == "mm":
-        plan = dispatch.norm_plan("mm", act.shape, ds.shape, mode, method)
+        bdim = act.ndim - 3
+        a_shape = _local(act.shape, bdim, n)
+        ds_shape = _local(ds.shape, bdim, n)
+        plan = dispatch.norm_plan("mm", a_shape, ds_shape, mode, method)
         fused = use_kernels and plan.impl == "kernel"
         if plan.method == "ghost":
             if fused:
                 from repro.kernels import ops as kops
-                return kops.ghost_norm_mm(act, ds, **plan.kwargs()), None
+                fn = lambda a, d: kops.ghost_norm_mm(a, d, **plan.kwargs())
+                if n > 1:
+                    return _shard_call(
+                        mesh, fn, (act, ds),
+                        (_bspec(act.ndim, bdim, ba),
+                         _bspec(ds.ndim, bdim, ba)), P(ba)), None
+                return fn(act, ds), None
             return ghost.sq_norm_mm_ghost(act, ds), None
         B, d, p = act.shape[-3], act.shape[-1], ds.shape[-1]
         L = act.shape[0] if act.ndim == 4 else 1
-        small = L * B * d * p <= ghost.MAP_THRESHOLD
+        # the cache lives batch-sharded: its footprint (and the decision to
+        # keep it) is per-device, like the kernel plans above
+        small = L * (B // n) * d * p <= ghost.MAP_THRESHOLD
         if mode == "bk-mixopt" and small:
             # mixopt's defining move (paper Sec 3.3): instantiate once, reuse
             # for module 5 in phase 3. Takes precedence over the fused kernel
@@ -126,60 +197,122 @@ def record_sq_norm(key: str, act, ds, mode: str, use_kernels: bool,
             return jnp.sum(g * g, axis=axes), g
         if fused:
             from repro.kernels import ops as kops
-            return kops.direct_norm_mm(act, ds, **plan.kwargs()), None
+            fn = lambda a, d: kops.direct_norm_mm(a, d, **plan.kwargs())
+            if n > 1:
+                return _shard_call(
+                    mesh, fn, (act, ds),
+                    (_bspec(act.ndim, bdim, ba),
+                     _bspec(ds.ndim, bdim, ba)), P(ba)), None
+            return fn(act, ds), None
         return ghost.sq_norm_mm_direct(act, ds), None
     if kind == "emb":
-        plan = dispatch.norm_plan("emb", act.shape, ds.shape, mode, method)
+        bdim = act.ndim - 2
+        plan = dispatch.norm_plan("emb", _local(act.shape, bdim, n),
+                                  _local(ds.shape, bdim, n), mode, method)
         if use_kernels and plan.impl == "kernel":
             from repro.kernels import ops as kops
-            return kops.ghost_norm_emb(act, ds, **plan.kwargs()), None
+            fn = lambda i, d: kops.ghost_norm_emb(i, d, **plan.kwargs())
+            if n > 1:
+                return _shard_call(
+                    mesh, fn, (act, ds),
+                    (_bspec(act.ndim, bdim, ba),
+                     _bspec(ds.ndim, bdim, ba)), P(ba)), None
+            return fn(act, ds), None
         return ghost.sq_norm_emb(act, ds), None
     if kind == "moe":
-        plan = dispatch.norm_plan("moe", act["a"].shape, ds.shape, mode,
-                                  method)
+        a = act["a"]
+        bdim = a.ndim - 4
+        plan = dispatch.norm_plan("moe", _local(a.shape, bdim, n),
+                                  _local(ds.shape, bdim, n), mode, method)
         fused = use_kernels and plan.impl == "kernel"
+        rec_specs = {"a": _bspec(a.ndim, bdim, ba),
+                     "mask": _bspec(act["mask"].ndim, bdim, ba)} if n > 1 \
+            else None
         if plan.method == "ghost":
             if fused:
                 from repro.kernels import ops as kops
+                if n > 1:
+                    return _shard_call(
+                        mesh, kops.ghost_norm_moe, (act, ds),
+                        (rec_specs, _bspec(ds.ndim, bdim, ba)), P(ba)), None
                 return kops.ghost_norm_moe(act, ds), None
             return ghost.sq_norm_moe_ghost(act, ds), None
         if fused:
             from repro.kernels import ops as kops
-            return kops.direct_norm_moe(act, ds, **plan.kwargs()), None
+            fn = lambda r, d: kops.direct_norm_moe(r, d, **plan.kwargs())
+            if n > 1:
+                return _shard_call(
+                    mesh, fn, (act, ds),
+                    (rec_specs, _bspec(ds.ndim, bdim, ba)), P(ba)), None
+            return fn(act, ds), None
         return ghost.sq_norm_moe_direct(act, ds), None
     raise ValueError(f"unknown tap kind in key {key!r}")
 
 
 def record_weighted_grad(key: str, act, ds, C, cached, use_kernels: bool,
-                         out_dtype, vocab: int = 0):
+                         out_dtype, vocab: int = 0, mesh=None, shard=None):
+    """Phase-3 weighted gradient G = a^T diag(C) ds for one tap. Under
+    ``shard`` each device contracts its local batch slice and the partial
+    sums meet in ONE psum over the batch axes — the only cross-device
+    reduction the clipped sum pays."""
     from repro.kernels import dispatch
     _, kind, _ = parse_key(key)
+    ba, n = shard if shard else ((), 1)
     if kind == "mm":
         if cached is not None:  # mixopt module-5 reuse: sum_i C_i g_i (2Bpd)
             eq = "lbdp,b->ldp" if cached.ndim == 4 else "bdp,b->dp"
             return jnp.einsum(eq, cached, C.astype(F32)).astype(out_dtype)
         if use_kernels:
-            plan = dispatch.grad_plan("mm", act.shape, ds.shape)
+            bdim = act.ndim - 3
+            plan = dispatch.grad_plan("mm", _local(act.shape, bdim, n),
+                                      _local(ds.shape, bdim, n))
             if plan.impl == "kernel":
                 from repro.kernels import ops as kops
-                return kops.clipped_grad_mm(act, C, ds,
-                                            **plan.kwargs()).astype(out_dtype)
+                fn = lambda a, c, d: kops.clipped_grad_mm(a, c, d,
+                                                          **plan.kwargs())
+                if n > 1:
+                    return _shard_call(
+                        mesh, fn, (act, C, ds),
+                        (_bspec(act.ndim, bdim, ba), P(ba),
+                         _bspec(ds.ndim, bdim, ba)), P(),
+                        psum_axes=ba).astype(out_dtype)
+                return fn(act, C, ds).astype(out_dtype)
         return ghost.weighted_grad_mm(act, C, ds, out_dtype)
     if kind == "emb":
         if use_kernels:
-            plan = dispatch.grad_plan("emb", act.shape, ds.shape, vocab)
+            bdim = act.ndim - 2
+            plan = dispatch.grad_plan("emb", _local(act.shape, bdim, n),
+                                      _local(ds.shape, bdim, n), vocab)
             if plan.impl == "kernel":
                 from repro.kernels import ops as kops
-                return kops.clipped_grad_emb(act, C, ds, vocab,
-                                             **plan.kwargs()).astype(out_dtype)
+                fn = lambda i, c, d: kops.clipped_grad_emb(i, c, d, vocab,
+                                                           **plan.kwargs())
+                if n > 1:
+                    return _shard_call(
+                        mesh, fn, (act, C, ds),
+                        (_bspec(act.ndim, bdim, ba), P(ba),
+                         _bspec(ds.ndim, bdim, ba)), P(),
+                        psum_axes=ba).astype(out_dtype)
+                return fn(act, C, ds).astype(out_dtype)
         return ghost.weighted_grad_emb(act, C, ds, vocab, out_dtype)
     if kind == "moe":
         if use_kernels:
-            plan = dispatch.grad_plan("moe", act["a"].shape, ds.shape)
+            a = act["a"]
+            bdim = a.ndim - 4
+            plan = dispatch.grad_plan("moe", _local(a.shape, bdim, n),
+                                      _local(ds.shape, bdim, n))
             if plan.impl == "kernel":
                 from repro.kernels import ops as kops
-                return kops.clipped_grad_moe(act, C, ds,
-                                             **plan.kwargs()).astype(out_dtype)
+                fn = lambda r, c, d: kops.clipped_grad_moe(r, c, d,
+                                                           **plan.kwargs())
+                if n > 1:
+                    rec_specs = {"a": _bspec(a.ndim, bdim, ba),
+                                 "mask": _bspec(act["mask"].ndim, bdim, ba)}
+                    return _shard_call(
+                        mesh, fn, (act, C, ds),
+                        (rec_specs, P(ba), _bspec(ds.ndim, bdim, ba)), P(),
+                        psum_axes=ba).astype(out_dtype)
+                return fn(act, C, ds).astype(out_dtype)
         return ghost.weighted_grad_moe(act, C, ds, out_dtype)
     raise ValueError(f"unknown tap kind in key {key!r}")
 
@@ -222,7 +355,7 @@ def plan_report(apply_fn, params, batch, cfg) -> dict:
 
 
 # ------------------------------------------------------------------- BK core
-def bk_clipped_sum(apply_fn, params, batch, cfg):
+def bk_clipped_sum(apply_fn, params, batch, cfg, mesh=None):
     """Phases 1-3 of BK: the pre-noise clipped gradient SUM (flat dict).
 
     ``cfg`` is a DPConfig or PrivacyPolicy; each clipping unit of the
@@ -233,10 +366,18 @@ def bk_clipped_sum(apply_fn, params, batch, cfg):
 
     This is the accumulation unit for the physical/logical batch split
     (paper footnote 2): sum over microbatches, then noise ONCE per logical
-    batch. Returns (flat_sums, aux)."""
+    batch. Returns (flat_sums, aux).
+
+    Under ``mesh`` (batch axes dividing B) the whole per-sample pipeline
+    stays batch-sharded: per-sample vector-param broadcasts, squared-norm
+    accumulators, clip factors and losses all live at B_local per device;
+    fused kernels run shard_map'd on their local slice, and each weighted
+    gradient pays exactly one psum across the batch axes."""
     policy = as_policy(cfg)
     assert policy.mode in BK_MODES, policy.mode
     B = batch_size_of(batch)
+    shard = batch_shard(mesh, B)
+    ba = shard[0] if shard else ()
     flat_params = flatten(params)
     tap_struct = tap_structs(apply_fn, params, batch)
     _, psp_paths = split_param_paths(params, tap_struct)
@@ -249,6 +390,12 @@ def bk_clipped_sum(apply_fn, params, batch, cfg):
              for k in active_taps}
     psp0 = {p: jnp.broadcast_to(flat_params[p], (B,) + flat_params[p].shape)
             for p in psp_active}
+    if shard:
+        # pin the per-sample broadcasts batch-sharded so the vjp's psp
+        # cotangents (true per-sample grads, B x param size) never
+        # materialize replicated
+        psp0 = {p: _constrain(v, mesh, _bspec(v.ndim, 0, ba))
+                for p, v in psp0.items()}
 
     # ---- phase 1: one forward + one output-gradient-only backward ----------
     def run(taps, psp):
@@ -269,7 +416,8 @@ def bk_clipped_sum(apply_fn, params, batch, cfg):
         wpath = parse_key(key)[0] + "/w"
         nk, cached = record_sq_norm(key, acts[key], ds_taps[key], policy.mode,
                                     policy.use_kernels,
-                                    res.method_for(wpath))
+                                    res.method_for(wpath), mesh=mesh,
+                                    shard=shard)
         cache[key] = cached
         u = unit_of(wpath)
         sq[u] = sq[u] + nk
@@ -277,6 +425,10 @@ def bk_clipped_sum(apply_fn, params, batch, cfg):
         g = g_psp[p].astype(F32)
         u = unit_of(p)
         sq[u] = sq[u] + jnp.sum(g * g, axis=tuple(range(1, g.ndim)))
+    if shard:
+        # the (B,) accumulators (and the clip factors derived from them)
+        # reduce locally at size B_local and STAY sharded into phase 3
+        sq = [_constrain(s, mesh, P(ba)) for s in sq]
     unit_norms, unit_C = unit_clip_factors(res, sq)
 
     # ---- phase 3: weighted gradients ----------------------------------------
@@ -288,7 +440,7 @@ def bk_clipped_sum(apply_fn, params, batch, cfg):
         vocab = w.shape[-2] if kind == "emb" else 0
         flat_grads[wpath] = record_weighted_grad(
             key, acts[key], ds_taps[key], unit_C[unit_of(wpath)], cache[key],
-            policy.use_kernels, w.dtype, vocab)
+            policy.use_kernels, w.dtype, vocab, mesh=mesh, shard=shard)
     for p in psp_active:
         g = g_psp[p]
         flat_grads[p] = jnp.einsum("b...,b->...", g.astype(F32),
@@ -300,15 +452,19 @@ def bk_clipped_sum(apply_fn, params, batch, cfg):
     return flat_grads, norm_aux(res, losses, sq, unit_norms, unit_C)
 
 
-def bk_private_grad(apply_fn, params, batch, rng, cfg, step=None):
+def bk_private_grad(apply_fn, params, batch, rng, cfg, step=None, mesh=None,
+                    pspecs=None):
     """Private gradient via Book-Keeping: clipped sum + noise + 1/B scale.
     ``step`` feeds stateful noise mechanisms (tree aggregation raises when it
-    is omitted); the default Gaussian ignores it. Returns (grads matching the
-    params tree, aux)."""
+    is omitted); the default Gaussian ignores it. ``mesh``/``pspecs`` lower
+    the clipped sum batch-sharded and draw phase-4 noise shard-local.
+    Returns (grads matching the params tree, aux)."""
     policy = as_policy(cfg)
     B = batch_size_of(batch)
-    flat_sums, aux = bk_clipped_sum(apply_fn, params, batch, policy)
+    flat_sums, aux = bk_clipped_sum(apply_fn, params, batch, policy,
+                                    mesh=mesh)
     # ---- phase 4: noise (sigma * sigma_scale_u * composed S per unit) + scale
     res = resolve_policy(policy, flatten(params))
-    flat_grads = finalize_noise(policy, res, flat_sums, rng, float(B), step)
+    flat_grads = finalize_noise(policy, res, flat_sums, rng, float(B), step,
+                                mesh=mesh, pspecs=pspecs)
     return unflatten(flat_grads), aux

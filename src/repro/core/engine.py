@@ -44,19 +44,23 @@ _BASELINES = {
 ALL_MODES = tuple(_BASELINES) + BK_MODES
 
 
-def make_grad_fn(apply_fn: Callable, cfg) -> Callable:
+def make_grad_fn(apply_fn: Callable, cfg, mesh=None, pspecs=None) -> Callable:
     """-> fn(params, batch, rng, step=None) -> (grads, aux). Pure; jit/pjit it
     freely (``step`` only matters to stateful noise mechanisms such as tree
     aggregation; it may be a traced scalar). ``cfg`` is a DPConfig or a
-    PrivacyPolicy."""
+    PrivacyPolicy. ``mesh``/``pspecs`` lower the pipeline batch-sharded with
+    shard-local noise — EVERY mode's phase 4 honors them (BK modes
+    additionally shard the book-keeping itself)."""
     policy = as_policy(cfg)
     if policy.mode in BK_MODES:
         return lambda params, batch, rng, step=None: bk_private_grad(
-            apply_fn, params, batch, rng, policy, step)
+            apply_fn, params, batch, rng, policy, step, mesh=mesh,
+            pspecs=pspecs)
     if policy.mode in _BASELINES:
         fn = _BASELINES[policy.mode]
         return lambda params, batch, rng, step=None: fn(
-            apply_fn, params, batch, rng, policy, step)
+            apply_fn, params, batch, rng, policy, step, mesh=mesh,
+            pspecs=pspecs)
     raise ValueError(f"unknown mode {policy.mode!r}; options: {ALL_MODES}")
 
 

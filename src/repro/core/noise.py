@@ -39,6 +39,15 @@ axis each shard adds N(0, (sigma/sqrt(n))^2) *before* the gradient
 all-reduce; the reduced sum then carries exactly N(0, sigma^2) — identical
 privacy, no single-host noise-generation bottleneck. (Used by the launcher
 when ``dp.distributed_noise`` is on.)
+
+Shard-local generation: ``sharded_normal`` draws each param's noise under a
+mesh so every device generates ONLY its NamedSharding slice, keyed by
+``fold_in(rng, linear shard index)`` — no replicated full-parameter noise
+tensor ever exists in HBM (the dominant phase-4 allocation for large
+models). Both mechanisms accept ``mesh``/``pspecs`` and route every draw
+through it; same (seed, mesh) is bit-deterministic, different shardings of
+the same params are statistically identical but not bitwise (the parity
+tests compare sigma=0 runs for exactness and noise moments separately).
 """
 from __future__ import annotations
 
@@ -48,10 +57,59 @@ from typing import Mapping
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 
 def _path_rng(rng, path: str):
     return jax.random.fold_in(rng, zlib.crc32(path.encode()) & 0x7FFFFFFF)
+
+
+def _spec_axis_names(entry):
+    """PartitionSpec entry -> tuple of mesh axis names (may be nested)."""
+    if entry is None:
+        return ()
+    if isinstance(entry, (tuple, list)):
+        return tuple(entry)
+    return (entry,)
+
+
+def sharded_normal(rng, shape, dtype=jnp.float32, mesh=None, spec=None):
+    """N(0,1) draw where each device generates only its shard.
+
+    ``spec`` is the leaf's PartitionSpec on ``mesh``. The draw runs inside a
+    shard_map: every shard folds its linear shard index (over the spec's
+    mesh axes) into ``rng`` and draws its local block, so the per-device
+    noise buffer is slice-sized and the full tensor exists only as the
+    logical (sharded) output. Mesh axes the spec does not mention see
+    identical keys, so the output is genuinely replicated across them.
+    Falls back to a plain (replicated) draw when there is no mesh, the spec
+    is trivial, or a sharded dim does not divide."""
+    if mesh is None or spec is None:
+        return jax.random.normal(rng, shape, dtype)
+    tail = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
+    names = [n for e in tail for n in _spec_axis_names(e)]
+    if not names or all(mesh.shape[n] == 1 for n in names):
+        return jax.random.normal(rng, shape, dtype)
+    local_shape = []
+    for dim, entry in zip(shape, tail):
+        n = 1
+        for a in _spec_axis_names(entry):
+            n *= mesh.shape[a]
+        if dim % n:
+            return jax.random.normal(rng, shape, dtype)  # non-divisible
+        local_shape.append(dim // n)
+    local_shape = tuple(local_shape)
+
+    def draw(key):
+        idx = jnp.int32(0)
+        for a in names:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        return jax.random.normal(jax.random.fold_in(key, idx), local_shape,
+                                 dtype)
+
+    from jax.experimental.shard_map import shard_map
+    return shard_map(draw, mesh=mesh, in_specs=P(),
+                     out_specs=P(*tail), check_rep=False)(rng)
 
 
 def _scale_for(sensitivity, path: str) -> float:
@@ -66,13 +124,23 @@ def next_pow2(n: int) -> int:
     return 1 << max(0, int(n) - 1).bit_length()
 
 
-def add_noise(flat_grads: dict, rng, sigma: float, R, denom: float) -> dict:
+def _spec_of(pspecs, path: str):
+    """Per-leaf PartitionSpec lookup (None mesh/pspecs -> replicated draw)."""
+    if pspecs is None:
+        return None
+    return pspecs.get(path)
+
+
+def add_noise(flat_grads: dict, rng, sigma: float, R, denom: float,
+              mesh=None, pspecs=None) -> dict:
     """(G + sigma*R*xi) / denom per leaf. sigma==0 -> just G/denom.
-    ``R`` may be a float (shared scale) or a {path: scale} mapping."""
+    ``R`` may be a float (shared scale) or a {path: scale} mapping; with
+    ``mesh``/``pspecs`` each device draws only its slice of xi."""
     out = {}
     for path, g in flat_grads.items():
         if sigma > 0.0:
-            xi = jax.random.normal(_path_rng(rng, path), g.shape, jnp.float32)
+            xi = sharded_normal(_path_rng(rng, path), g.shape, jnp.float32,
+                                mesh=mesh, spec=_spec_of(pspecs, path))
             g = g + (sigma * _scale_for(R, path)) * xi.astype(g.dtype)
         out[path] = g / denom
     return out
@@ -91,10 +159,25 @@ class GaussianMechanism:
                  restart_every: int = 0, completion: bool = False):
         del seed, depth, restart_every, completion  # stateless: per-step rng
 
-    def add(self, flat_grads: dict, rng, sigma: float, sensitivity,
-            denom: float, step=None) -> dict:
+    def add_leaf(self, path: str, g, rng, sigma: float, scale,
+                 denom: float, step=None, mesh=None, spec=None):
+        """One leaf of ``add`` — the fused noise+optimizer path consumes
+        leaves one at a time so the full noised-gradient tree is never
+        live."""
         del step  # per-step independence: the per-call rng is the state
-        return add_noise(flat_grads, rng, sigma, sensitivity, denom)
+        if sigma > 0.0:
+            xi = sharded_normal(_path_rng(rng, path), g.shape, jnp.float32,
+                                mesh=mesh, spec=spec)
+            g = g + (sigma * scale) * xi.astype(g.dtype)
+        return g / denom
+
+    def add(self, flat_grads: dict, rng, sigma: float, sensitivity,
+            denom: float, step=None, mesh=None, pspecs=None) -> dict:
+        return {path: self.add_leaf(path, g, rng, sigma,
+                                    _scale_for(sensitivity, path), denom,
+                                    step=step, mesh=mesh,
+                                    spec=_spec_of(pspecs, path))
+                for path, g in flat_grads.items()}
 
 
 class TreeAggregationMechanism:
@@ -152,13 +235,16 @@ class TreeAggregationMechanism:
         k = jax.random.fold_in(k, epoch)
         return jax.random.fold_in(jax.random.fold_in(k, level), idx)
 
-    def prefix_noise(self, path: str, shape, t, dtype=jnp.float32, epoch=0):
+    def prefix_noise(self, path: str, shape, t, dtype=jnp.float32, epoch=0,
+                     mesh=None, spec=None):
         """N_e(t): unit-variance-per-node cumulative noise for the epoch's
-        steps [1..t]."""
+        steps [1..t]. With ``mesh``/``spec`` every node draw is shard-local
+        (each device holds slice-sized node noise only)."""
         out = jnp.zeros(shape, dtype)
         for b in range(self.depth):
             i = t >> b
-            z = jax.random.normal(self._node(path, b, i, epoch), shape, dtype)
+            z = sharded_normal(self._node(path, b, i, epoch), shape, dtype,
+                               mesh=mesh, spec=spec)
             out = out + jnp.asarray(i & 1, dtype) * z
         return out
 
@@ -168,9 +254,8 @@ class TreeAggregationMechanism:
             return 0, step + 1
         return step // self.restart_every, (step % self.restart_every) + 1
 
-    def add(self, flat_grads: dict, rng, sigma: float, sensitivity,
-            denom: float, step=None) -> dict:
-        del rng
+    def _local_prefix(self, sigma: float, step):
+        """Validated (epoch, t, t_hi) for one call (shared by every leaf)."""
         if sigma > 0.0 and step is None:
             # a forgotten step would re-add the IDENTICAL N(1)-N(0) draw
             # every call — differences of released grads become noise-free.
@@ -195,15 +280,27 @@ class TreeAggregationMechanism:
             # tree so the FTRL restart rebases on single-root-node noise
             t_hi = jnp.where(t == self.restart_every,
                              next_pow2(self.restart_every), t)
-        out = {}
-        for path, g in flat_grads.items():
-            if sigma > 0.0:
-                delta = (self.prefix_noise(path, g.shape, t_hi, epoch=epoch)
-                         - self.prefix_noise(path, g.shape, t - 1, epoch=epoch))
-                g = g + (sigma * _scale_for(sensitivity, path)) * delta.astype(
-                    g.dtype)
-            out[path] = g / denom
-        return out
+        return epoch, t, t_hi
+
+    def add_leaf(self, path: str, g, rng, sigma: float, scale,
+                 denom: float, step=None, mesh=None, spec=None):
+        del rng  # node noise keys off the fixed seed only
+        epoch, t, t_hi = self._local_prefix(sigma, step)
+        if sigma > 0.0:
+            delta = (self.prefix_noise(path, g.shape, t_hi, epoch=epoch,
+                                       mesh=mesh, spec=spec)
+                     - self.prefix_noise(path, g.shape, t - 1, epoch=epoch,
+                                         mesh=mesh, spec=spec))
+            g = g + (sigma * scale) * delta.astype(g.dtype)
+        return g / denom
+
+    def add(self, flat_grads: dict, rng, sigma: float, sensitivity,
+            denom: float, step=None, mesh=None, pspecs=None) -> dict:
+        return {path: self.add_leaf(path, g, rng, sigma,
+                                    _scale_for(sensitivity, path), denom,
+                                    step=step, mesh=mesh,
+                                    spec=_spec_of(pspecs, path))
+                for path, g in flat_grads.items()}
 
 
 NOISE_MECHANISMS = {

@@ -284,18 +284,43 @@ def norm_aux(res: ResolvedPolicy, losses, sq, unit_norms, unit_C) -> dict:
 
 
 def finalize_noise(policy: PrivacyPolicy, res: ResolvedPolicy,
-                   flat_sums: dict, rng, denom: float, step=None) -> dict:
+                   flat_sums: dict, rng, denom: float, step=None,
+                   mesh=None, pspecs=None) -> dict:
     """Phase 4 shared by every implementation (all 8 BK/baseline modes route
     here): the policy's noise mechanism over the trainable leaves, each leaf
     scaled by its unit's sigma_scale * composed sensitivity (a homogeneous
     policy passes the bare composed sensitivity — bitwise-identical to the
     pre-heterogeneous behaviour). Frozen leaves pass through untouched (they
-    are zeros)."""
+    are zeros). With ``mesh``/``pspecs`` (flat {path: PartitionSpec}) the
+    noise is generated shard-local — each device draws only its slice."""
     active = {p: g for p, g in flat_sums.items() if p not in res.frozen}
     scales = res.noise_scales() if res.heterogeneous else res.sensitivity
     out = policy.mechanism().add(active, rng, policy.sigma, scales,
-                                 denom, step=step)
+                                 denom, step=step, mesh=mesh, pspecs=pspecs)
     for p, g in flat_sums.items():
         if p in res.frozen:
             out[p] = g
     return out
+
+
+def noise_leaf_fn(policy: PrivacyPolicy, res: ResolvedPolicy, rng,
+                  denom: float, step=None, mesh=None, pspecs=None):
+    """Per-leaf phase 4: -> fn(path, g_sum) -> private grad leaf.
+
+    The fused noise+optimizer-update path (``Optimizer.update_leaves``)
+    consumes leaves one at a time so the full noised-gradient tree is never
+    materialized alongside the clipped sums — only one leaf's noise is live
+    at any point in the schedule. Semantically identical to
+    ``finalize_noise`` leaf-by-leaf (frozen leaves pass through)."""
+    from repro.core.noise import _scale_for, _spec_of
+    mech = policy.mechanism()
+    scales = res.noise_scales() if res.heterogeneous else res.sensitivity
+
+    def leaf(path: str, g):
+        if path in res.frozen:
+            return g
+        return mech.add_leaf(path, g, rng, policy.sigma,
+                             _scale_for(scales, path), denom, step=step,
+                             mesh=mesh, spec=_spec_of(pspecs, path))
+
+    return leaf

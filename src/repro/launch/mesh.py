@@ -24,6 +24,27 @@ def make_test_mesh(shape=(1, 1), axes=("data", "model")):
     return jax.make_mesh(shape, axes)
 
 
+def make_train_mesh(data: int = 0, model: int = 1):
+    """Mesh for the real train driver, sized to whatever devices exist:
+    (data=N/model, model) — one CPU gives the degenerate (1, 1) mesh, so
+    every train() call runs the same mesh-lowered jit path regardless of
+    topology. ``data=0`` means "all remaining devices"."""
+    n = len(jax.devices())
+    if model <= 0:
+        model = 1
+    if data <= 0:
+        if n % model:
+            raise ValueError(
+                f"model axis {model} does not divide {n} devices "
+                "(pass an explicit data size to use a subset)")
+        data = n // model
+    if data * model > n:
+        raise ValueError(f"mesh ({data}, {model}) needs {data * model} "
+                         f"devices, have {n}")
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=jax.devices()[:data * model])
+
+
 def batch_axes(mesh) -> tuple:
     """Axes the batch dim shards over (pod included when present)."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

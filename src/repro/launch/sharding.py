@@ -83,6 +83,14 @@ def param_pspecs(params, mesh=None) -> dict:
     return unflatten(out)
 
 
+def flat_param_pspecs(params, mesh) -> dict:
+    """Flat {path: sanitized PartitionSpec} — the per-leaf layout table the
+    shard-local noise generator keys off (each device draws only its slice
+    of each param's noise). Same rules table as param_pspecs, flattened, so
+    params and their noise can never shard differently."""
+    return flatten(param_pspecs(params, mesh))
+
+
 def opt_state_pspecs(opt_name: str, params, param_specs) -> dict:
     """Optimizer-state specs mirror the param specs (adafactor drops the
     factored dim)."""
@@ -91,6 +99,8 @@ def opt_state_pspecs(opt_name: str, params, param_specs) -> dict:
         return {"m": param_specs, "v": param_specs}
     if opt_name == "sgd":
         return {"m": param_specs}
+    if opt_name == "ftrl":
+        return {"sum": param_specs, "m": param_specs, "theta0": param_specs}
     if opt_name == "adafactor":
         out = {}
         for p, v in flatten(params).items():
@@ -111,6 +121,16 @@ def batch_pspecs(batch_like, mesh) -> dict:
     return jax.tree_util.tree_map(
         lambda x: sanitize(P(*((ba,) + (None,) * (len(x.shape) - 1))),
                            x.shape, mesh), batch_like)
+
+
+def state_pspecs(opt_name: str, params, mesh):
+    """PartitionSpecs for a launch.steps.TrainState: params via the rules
+    table, optimizer state mirroring the params, step/rng replicated."""
+    from repro.launch.steps import TrainState
+    pspec = param_pspecs(params, mesh)
+    return TrainState(params=pspec,
+                      opt_state=opt_state_pspecs(opt_name, params, pspec),
+                      step=P(), rng=P())
 
 
 def cache_pspecs(cache_like, mesh) -> dict:

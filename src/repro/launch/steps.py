@@ -1,6 +1,12 @@
 """Step builders: (arch x shape x mesh) -> jit-able function + abstract args
 + shardings. Used by the dry-run (lower/compile on ShapeDtypeStructs) and by
-the real train/serve drivers."""
+the real train/serve drivers.
+
+``TrainState`` + ``make_train_step`` are the single source of truth for the
+production train step: a mesh-lowered, donation-clean jitted function over
+(state, batch) with explicit in/out shardings. The dryrun planner, the real
+``launch.train`` driver, ``benchmarks.step_bench`` and the sharded tests all
+build the same step through here."""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
@@ -12,12 +18,74 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
 from repro.configs.registry import build, get_config, get_policy, has_policy
-from repro.core.bk import DPConfig
-from repro.core.policy import as_policy
+from repro.core.bk import BK_MODES, DPConfig
+from repro.core.policy import as_policy, noise_leaf_fn, resolve_policy
 from repro.data.synthetic import batch_spec
 from repro.launch import sharding as sh
-from repro.optim.accumulate import accumulated_private_grad
+from repro.optim.accumulate import (accumulated_clipped_sum,
+                                    accumulated_private_grad)
 from repro.optim.optimizers import make_optimizer
+from repro.utils.tree import flatten
+
+
+@dataclass
+class TrainState:
+    """The donated unit of the train loop: everything a step consumes and
+    produces. ``step`` is a () int32 on device; ``rng`` is the BASE key —
+    each step folds its own index in, so the state never needs a host-side
+    rng update and resume is bit-exact from (seed, step) alone."""
+    params: dict
+    opt_state: dict
+    step: jax.Array
+    rng: jax.Array
+
+
+jax.tree_util.register_dataclass(
+    TrainState, data_fields=("params", "opt_state", "step", "rng"),
+    meta_fields=())
+
+
+def make_train_step(apply_fn, params_like, opt, opt_name: str, dp,
+                    microbatch: int, mesh, batch_like):
+    """-> (step_fn, state_shardings, batch_shardings).
+
+    ``step_fn(state, batch) -> (new_state, loss)`` is pure and built for
+
+        jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None), donate_argnums=(0,))
+
+    Inside: BK runs mesh-lowered (batch-sharded book-keeping, one psum per
+    weighted grad), phase-4 noise is generated shard-local, and — whenever
+    the optimizer has a fused per-leaf path — the noise-add and the
+    optimizer update happen in ONE pass over the leaves, so no second
+    full-parameter-size gradient tree is ever live."""
+    policy = as_policy(dp)
+    state_sh = sh.named(mesh, sh.state_pspecs(opt_name, params_like, mesh))
+    batch_sh = sh.named(mesh, sh.batch_pspecs(batch_like, mesh))
+    flat_pspecs = sh.flat_param_pspecs(params_like, mesh)
+    res = resolve_policy(policy, flatten(params_like))
+
+    def step_fn(state, batch):
+        rng = jax.random.fold_in(state.rng, state.step)
+        if policy.mode in BK_MODES and opt.update_leaves is not None:
+            sums, aux, B = accumulated_clipped_sum(
+                apply_fn, state.params, batch, policy, microbatch, mesh=mesh)
+            leaf = noise_leaf_fn(policy, res, rng, float(B), step=state.step,
+                                 mesh=mesh, pspecs=flat_pspecs)
+            new_p, new_o = opt.update_leaves(
+                lambda path, p: leaf(path, sums[path]),
+                state.opt_state, state.params, state.step)
+        else:
+            grads, aux = accumulated_private_grad(
+                apply_fn, state.params, batch, rng, policy, microbatch,
+                state.step, mesh=mesh, pspecs=flat_pspecs)
+            new_p, new_o = opt.update(grads, state.opt_state, state.params,
+                                      state.step)
+        new_state = TrainState(params=new_p, opt_state=new_o,
+                               step=state.step + 1, rng=state.rng)
+        return new_state, aux["loss"]
+
+    return step_fn, state_sh, batch_sh
 
 # physical (micro) batch for train_4k, tuned so the per-device book-keeping
 # footprint stays within v5e HBM (see EXPERIMENTS.md §Dry-run)
@@ -110,20 +178,14 @@ def plan_cell(arch: str, shape_name: str, mesh, dp=None,
         bspec = batch_spec(cfg, shape.global_batch, shape.seq_len,
                            dtype=cfg.dtype)
         ostate = jax.eval_shape(opt.init, params)
-        osh = sh.named(mesh, sh.opt_state_pspecs(opt_name, params, pspec))
-        bsh = sh.named(mesh, sh.batch_pspecs(bspec, mesh))
-
-        def train_step(p, o, step, batch, rng):
-            grads, aux = accumulated_private_grad(model.apply, p, batch, rng,
-                                                  dp, mb)
-            new_p, new_o = opt.update(grads, o, p, step)
-            return new_p, new_o, aux["loss"]
-
+        step_fn, state_sh, bsh = make_train_step(
+            model.apply, params, opt, opt_name, dp, mb, mesh, bspec)
+        state = TrainState(params=params, opt_state=ostate,
+                           step=jax.ShapeDtypeStruct((), jnp.int32),
+                           rng=_key_struct())
         return CellPlan(
-            arch, shape_name, "train", train_step,
-            (params, ostate, jax.ShapeDtypeStruct((), jnp.int32), bspec,
-             _key_struct()),
-            (psh, osh, None, bsh, None), donate=(0, 1),
+            arch, shape_name, "train", step_fn, (state, bspec),
+            (state_sh, bsh), donate=(0,),
             note=f"dp={as_policy(dp).mode} micro={mb} opt={opt_name}"
                  f"{policy_tag}")
 

@@ -39,7 +39,8 @@ from repro.core.policy import as_policy, resolve_policy
 from repro.core.tape import Tape, parse_key
 from repro.data.pipeline import Pipeline, PipelineConfig
 from repro.launch import sharding as sh
-from repro.optim.accumulate import accumulated_private_grad
+from repro.launch.mesh import make_train_mesh
+from repro.launch.steps import TrainState, make_train_step
 from repro.optim.optimizers import make_optimizer
 from repro.optim.schedules import make_schedule
 from repro.runtime.fault_tolerance import (CheckpointManager, Heartbeat,
@@ -191,10 +192,21 @@ def train(model_cfg, tc: TrainConfig, dp, log=print,
     model = build(model_cfg)
     policy = as_policy(dp)
     if target_epsilon > 0 and dataset_size > 0 and policy.sigma == 0.0:
+        # Tree-aggregation releases (DP-FTRL, or ANY policy configured with
+        # noise='tree') get no subsampling amplification — the SGM curve
+        # under-reports their epsilon, so calibrate against the tree
+        # accountant whenever tree noise will actually run
+        tree_release = tc.optimizer == "ftrl" or policy.noise == "tree"
+        mechanism = "tree" if tree_release else "sgm"
         budget = budget_for(target_epsilon, delta, tc.global_batch,
-                            dataset_size, tc.steps * tc.global_batch / dataset_size)
+                            dataset_size,
+                            tc.steps * tc.global_batch / dataset_size,
+                            mechanism=mechanism,
+                            restart_every=(tc.restart_every
+                                           or policy.noise_restart_every))
         dp = dataclasses.replace(dp, sigma=budget.sigma)
-        log(f"calibrated sigma={budget.sigma:.3f} for eps={budget.epsilon:.2f}")
+        log(f"calibrated sigma={budget.sigma:.3f} for "
+            f"eps={budget.epsilon:.2f} ({mechanism} accountant)")
         if any(g.sigma_scale != 1.0 for g in policy.groups):
             log("WARNING: sigma was calibrated with the FLAT single-sigma "
                 "accountant, but this policy sets per-group sigma_scale — "
@@ -250,13 +262,6 @@ def train(model_cfg, tc: TrainConfig, dp, log=print,
         log(f"DP-FTRL: tree noise depth={policy.noise_depth} "
             f"restart_every={ftrl_restart or 'never'} "
             f"completion={completion}")
-        if target_epsilon > 0:
-            log("WARNING: sigma was calibrated with the subsampled-Gaussian "
-                "(amplification) accountant, which does NOT apply to "
-                "DP-FTRL's tree-noise release — the logged epsilon is "
-                "optimistic for this run. Calibrate sigma with a "
-                "tree-aggregation accountant instead (README 'Accounting "
-                "caveats'; ROADMAP follow-up).")
 
     # validate the tree horizon upfront for EVERY optimizer: inside the
     # jitted step the index is traced, so the mechanism's own concrete-step
@@ -305,43 +310,67 @@ def train(model_cfg, tc: TrainConfig, dp, log=print,
                                and jax.default_backend() != "cpu"):
         autotune_warmup(model.apply, params, pipe.batch(0), dp, log=log)
 
-    @jax.jit
-    def step_fn(p, o, i, batch, rng):
-        if as_policy(dp).mode == "nonprivate":
-            from repro.core.engine import make_grad_fn
-            grads, aux = make_grad_fn(model.apply, dp)(p, batch, rng, i)
-        else:
-            grads, aux = accumulated_private_grad(model.apply, p, batch, rng,
-                                                  dp, tc.microbatch, i)
-        new_p, new_o = opt.update(grads, o, p, i)
-        return new_p, new_o, aux["loss"]
+    # ---- the mesh-native donated step ---------------------------------------
+    # One jitted (state, batch) -> (state, loss): explicit in/out shardings
+    # from the partition-spec tables, the whole TrainState donated, BK
+    # lowered batch-sharded with shard-local noise (launch.steps).
+    mesh = make_train_mesh(tc.mesh_data, tc.mesh_model)
+    if len(mesh.devices.flat) > 1:
+        log(f"mesh {dict(mesh.shape)} over {mesh.devices.size} devices")
+    step_fn, state_sh, batch_sh = make_train_step(
+        model.apply, params, opt, tc.optimizer, dp, tc.microbatch, mesh,
+        pipe.batch(0))
+    jitted = jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, None), donate_argnums=(0,))
+    state = TrainState(params=jax.device_put(params, state_sh.params),
+                       opt_state=jax.device_put(opt_state,
+                                                state_sh.opt_state),
+                       step=jnp.asarray(start, jnp.int32),
+                       rng=jax.random.PRNGKey(tc.seed + 1))
 
-    losses = []
-    rng0 = jax.random.PRNGKey(tc.seed + 1)
-    for step in range(start, tc.steps):
-        t0 = time.time()
-        batch = pipe.batch(step)
-        rng = jax.random.fold_in(rng0, step)
-        params, opt_state, loss = step_fn(params, opt_state,
-                                          jnp.asarray(step), batch, rng)
-        losses.append(float(loss))
-        hb.beat(step)
-        if mgr is not None:
-            mgr.maybe_save(step, {"params": params, "opt": opt_state,
-                                  "step": np.asarray(step)})
-        if guard.should_stop():
-            if mgr is not None:
-                mgr.maybe_save(step, {"params": params, "opt": opt_state,
-                                      "step": np.asarray(step)}, force=True)
-            log(f"preempted at step {step}; checkpoint saved")
-            break
-        if step % 10 == 0 or step == tc.steps - 1:
-            log(f"step {step:5d} loss {float(loss):.4f} "
-                f"({time.time() - t0:.2f}s)")
+    def snapshot(s: TrainState, step: int) -> dict:
+        return {"params": s.params, "opt": s.opt_state,
+                "step": np.asarray(step)}
+
+    # losses stay on device; the buffer drains every log_every steps and at
+    # exit — no step blocks on a device->host sync
+    losses, pending = [], []
+    log_every = max(1, tc.log_every)
+    t_flush = time.time()
+
+    def flush(step: int):
+        nonlocal t_flush
+        if not pending:
+            return
+        n = len(pending)
+        losses.extend(float(x) for x in jax.device_get(pending))
+        pending.clear()
+        dt = (time.time() - t_flush) / n
+        t_flush = time.time()
+        log(f"step {step:5d} loss {losses[-1]:.4f} ({dt:.2f}s/step over "
+            f"last {n})")
+
+    with mesh:
+        for step in range(start, tc.steps):
+            batch = jax.device_put(pipe.batch(step), batch_sh)
+            state, loss = jitted(state, batch)
+            pending.append(loss)
+            hb.beat(step)
+            saved = (mgr.maybe_save(step, snapshot(state, step))
+                     if mgr is not None else False)
+            if guard.should_stop():
+                if mgr is not None and not saved:
+                    mgr.maybe_save(step, snapshot(state, step), force=True)
+                flush(step)
+                log(f"preempted at step {step}; checkpoint saved")
+                break
+            if (step + 1) % log_every == 0 or step == tc.steps - 1:
+                flush(step)
+    flush(tc.steps - 1)
     if mgr is not None:
         mgr.wait()
     hb.close()
-    return params, losses
+    return jax.device_get(state.params), losses
 
 
 def main():
@@ -378,9 +407,21 @@ def main():
                     default="auto",
                     help="measured kernel-block autotune at startup "
                          "(auto = on for non-CPU backends)")
+    ap.add_argument("--mesh", default="",
+                    help="data,model axis sizes for the train mesh "
+                         "(e.g. 4,2); default: all devices on 'data'")
+    ap.add_argument("--log-every", type=int, default=10,
+                    help="loss log + device->host flush period in steps")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
     args = ap.parse_args()
+
+    mesh_data, mesh_model = 0, 1
+    if args.mesh:
+        try:
+            mesh_data, mesh_model = (int(x) for x in args.mesh.split(","))
+        except ValueError:
+            ap.error(f"--mesh wants 'data,model' ints, got {args.mesh!r}")
 
     mc = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     mc = mc.with_(dtype="float32", param_dtype="float32") if args.smoke else mc
@@ -395,6 +436,8 @@ def main():
                      restart_every=args.restart_every,
                      tree_completion=args.tree_completion,
                      policy=args.policy, autotune=args.autotune,
+                     mesh_data=mesh_data, mesh_model=mesh_model,
+                     log_every=args.log_every,
                      checkpoint_dir=args.ckpt_dir,
                      checkpoint_every=args.ckpt_every)
     dp = resolve_dp(args.arch, args.policy, args.mode, args.clipping,

@@ -5,22 +5,31 @@ the clipped sums accumulate across microbatches in a lax.scan; noise is added
 ONCE per logical batch via the policy's mechanism (per clip unit:
 sigma * sigma_scale_u * composed sensitivity; tree-aggregation increments
 when the policy runs DP-FTRL noise — ``step`` threads through for that).
-Accepts a DPConfig or a PrivacyPolicy."""
+Accepts a DPConfig or a PrivacyPolicy.
+
+``accumulated_clipped_sum`` exposes phases 1-3 alone (the pre-noise sums) so
+the mesh-native train step can fuse phase 4 directly into the optimizer's
+per-leaf update (``Optimizer.update_leaves``) — no second full-size gradient
+tree is ever live. ``mesh`` lowers the BK pipeline batch-sharded
+(core.bk.bk_clipped_sum) and keeps the microbatch scan's carries sharded.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.bk import bk_clipped_sum
+from repro.core.bk import BK_MODES, batch_shard, bk_clipped_sum
 from repro.core.policy import as_policy, finalize_noise, resolve_policy
 from repro.utils.tree import flatten, unflatten
 
 
 def accumulated_baseline_grad(apply_fn, params, batch, rng, cfg,
-                              microbatch: int, step=None):
+                              microbatch: int, step=None, mesh=None,
+                              pspecs=None):
     """Microbatched accumulation for the non-BK modes (nonprivate /
     ghostclip / opacus / ...): per-microbatch grads are re-scaled to sums,
-    accumulated under lax.scan, then noised once (DP modes)."""
+    accumulated under lax.scan, then noised once (DP modes).
+    ``mesh``/``pspecs`` keep the once-per-logical-batch noise shard-local."""
     import dataclasses
 
     from repro.core.engine import make_grad_fn
@@ -31,7 +40,8 @@ def accumulated_baseline_grad(apply_fn, params, batch, rng, cfg,
                  else dataclasses.replace(policy, sigma=0.0))
     grad_fn = make_grad_fn(apply_fn, mb_policy)
     if microbatch <= 0 or microbatch >= B:
-        return make_grad_fn(apply_fn, policy)(params, batch, rng, step)
+        return make_grad_fn(apply_fn, policy, mesh=mesh,
+                            pspecs=pspecs)(params, batch, rng, step)
     assert B % microbatch == 0, (B, microbatch)
     M = B // microbatch
     mb_batch = jax.tree_util.tree_map(
@@ -54,29 +64,46 @@ def accumulated_baseline_grad(apply_fn, params, batch, rng, cfg,
         grads = jax.tree_util.tree_map(lambda s: s / float(B), sums)
     else:
         res = resolve_policy(policy, flatten(params))
-        flat = finalize_noise(policy, res, flatten(sums), rng, float(B), step)
+        flat = finalize_noise(policy, res, flatten(sums), rng, float(B), step,
+                              mesh=mesh, pspecs=pspecs)
         grads = unflatten(flat)
     return grads, {"loss": jnp.mean(losses)}
 
 
-def accumulated_private_grad(apply_fn, params, batch, rng, cfg,
-                             microbatch: int, step=None):
-    """batch leaves (B_logical, ...); microbatch must divide B_logical.
-    Returns (grads, aux) identical in distribution to the full-batch BK call."""
-    from repro.core.bk import BK_MODES
+def _shard_microbatches(mb_batch, mesh, microbatch: int):
+    """Pin the (M, microbatch, ...) reshape batch-sharded on dim 1 so the
+    scan streams each device's slice (the reshape must not gather)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    shard = batch_shard(mesh, microbatch)
+    if not shard:
+        return mb_batch
+    ba, _ = shard
 
+    def pin(x):
+        spec = P(*((None, ba) + (None,) * (x.ndim - 2)))
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map(pin, mb_batch)
+
+
+def accumulated_clipped_sum(apply_fn, params, batch, cfg, microbatch: int,
+                            mesh=None):
+    """Phases 1-3 over the logical batch: per-sample clipping inside each
+    microbatch, clipped sums accumulated under lax.scan (one microbatch's
+    book-keeping live at a time). Returns (flat_sums, aux, B_logical) —
+    phase 4 (noise + 1/B) is the caller's, via ``finalize_noise`` or the
+    fused ``policy.noise_leaf_fn`` + ``Optimizer.update_leaves`` path."""
     policy = as_policy(cfg)
-    if policy.mode not in BK_MODES:
-        return accumulated_baseline_grad(apply_fn, params, batch, rng, policy,
-                                         microbatch, step)
+    assert policy.mode in BK_MODES, policy.mode
     B = jax.tree_util.tree_leaves(batch)[0].shape[0]
     if microbatch <= 0 or microbatch >= B:
-        from repro.core.bk import bk_private_grad
-        return bk_private_grad(apply_fn, params, batch, rng, policy, step)
+        sums, aux = bk_clipped_sum(apply_fn, params, batch, policy, mesh=mesh)
+        return sums, aux, B
     assert B % microbatch == 0, (B, microbatch)
     M = B // microbatch
     mb_batch = jax.tree_util.tree_map(
         lambda x: x.reshape((M, microbatch) + x.shape[1:]), batch)
+    mb_batch = _shard_microbatches(mb_batch, mesh, microbatch)
 
     sums0, aux0 = jax.eval_shape(
         lambda p, b: bk_clipped_sum(apply_fn, p, b, policy), params,
@@ -85,13 +112,35 @@ def accumulated_private_grad(apply_fn, params, batch, rng, cfg,
     zeros = {k: jnp.zeros(v.shape, v.dtype) for k, v in sums0.items()}
 
     def body(acc, mb):
-        s, aux = bk_clipped_sum(apply_fn, params, mb, policy)
+        s, aux = bk_clipped_sum(apply_fn, params, mb, policy, mesh=mesh)
         acc = {k: acc[k] + s[k] for k in acc}
         return acc, (aux["loss"], aux["per_sample_norms"])
 
     sums, (losses, norms) = jax.lax.scan(body, zeros, mb_batch)
-    res = resolve_policy(policy, flatten(params))
-    flat = finalize_noise(policy, res, sums, rng, float(B), step)
     aux = {"loss": jnp.mean(losses),
            "per_sample_norms": norms.reshape(-1)}
+    return sums, aux, B
+
+
+def accumulated_private_grad(apply_fn, params, batch, rng, cfg,
+                             microbatch: int, step=None, mesh=None,
+                             pspecs=None):
+    """batch leaves (B_logical, ...); microbatch must divide B_logical.
+    Returns (grads, aux) identical in distribution to the full-batch BK call.
+    ``mesh``/``pspecs`` lower BK batch-sharded with shard-local noise."""
+    policy = as_policy(cfg)
+    if policy.mode not in BK_MODES:
+        return accumulated_baseline_grad(apply_fn, params, batch, rng, policy,
+                                         microbatch, step, mesh=mesh,
+                                         pspecs=pspecs)
+    B = jax.tree_util.tree_leaves(batch)[0].shape[0]
+    if microbatch <= 0 or microbatch >= B:
+        from repro.core.bk import bk_private_grad
+        return bk_private_grad(apply_fn, params, batch, rng, policy, step,
+                               mesh=mesh, pspecs=pspecs)
+    sums, aux, _ = accumulated_clipped_sum(apply_fn, params, batch, policy,
+                                           microbatch, mesh=mesh)
+    res = resolve_policy(policy, flatten(params))
+    flat = finalize_noise(policy, res, sums, rng, float(B), step, mesh=mesh,
+                          pspecs=pspecs)
     return unflatten(flat), aux

@@ -31,7 +31,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.optim.optimizers import Optimizer, _tmap
+from repro.optim.optimizers import Optimizer, _materialized, _tmap
 
 F32 = jnp.float32
 
@@ -49,11 +49,13 @@ def ftrl(lr_fn, momentum: float = 0.0, restart_every: int = 0,
 
     def init(params):
         z = lambda p: jnp.zeros_like(p, F32)
+        # jnp.array (not astype): astype is a no-op ALIAS for f32 params,
+        # and a state that shares buffers with the params breaks the train
+        # step's whole-TrainState donation (same buffer donated twice)
         return {"sum": _tmap(z, params), "m": _tmap(z, params),
-                "theta0": _tmap(lambda p: p.astype(F32), params)}
+                "theta0": _tmap(lambda p: jnp.array(p, dtype=F32), params)}
 
-    def update(grads, state, params, step):
-        lr = lr_fn(step)
+    def _restart_keep(step):
         if restart_every:
             # rebase BEFORE consuming this step's gradient (the previous
             # step's iterate becomes the new anchor); works under jit with a
@@ -62,14 +64,24 @@ def ftrl(lr_fn, momentum: float = 0.0, restart_every: int = 0,
                                       jnp.asarray(step) % restart_every == 0)
         else:
             restart = jnp.asarray(False)
-        keep = jnp.where(restart, 0.0, 1.0).astype(F32)
-        theta0 = _tmap(lambda t0, p: jnp.where(restart, p.astype(F32), t0),
-                       state["theta0"], params)
-        s = _tmap(lambda s_, g: keep * s_ + g.astype(F32),
-                  state["sum"], grads)
-        m = _tmap(lambda m_, s_: momentum * keep * m_ + s_, state["m"], s)
-        new_p = _tmap(lambda t0, m_, p: (t0 - lr * m_).astype(p.dtype),
-                      theta0, m, params)
-        return new_p, {"sum": s, "m": m, "theta0": theta0}
+        return restart, jnp.where(restart, 0.0, 1.0).astype(F32)
 
-    return Optimizer(init, update)
+    def update_leaves(grad_for, state, params, step):
+        from repro.utils.tree import flatten, unflatten
+        lr = lr_fn(step)
+        restart, keep = _restart_keep(step)
+        fp = flatten(params)
+        fs, fm, ft = (flatten(state["sum"]), flatten(state["m"]),
+                      flatten(state["theta0"]))
+        new_s, new_m, new_t, new_p = {}, {}, {}, {}
+        for path, p in fp.items():
+            t0 = jnp.where(restart, p.astype(F32), ft[path])
+            s_ = keep * fs[path] + grad_for(path, p).astype(F32)
+            m_ = momentum * keep * fm[path] + s_
+            new_t[path], new_s[path], new_m[path] = t0, s_, m_
+            new_p[path] = (t0 - lr * m_).astype(p.dtype)
+        return unflatten(new_p), {"sum": unflatten(new_s),
+                                  "m": unflatten(new_m),
+                                  "theta0": unflatten(new_t)}
+
+    return Optimizer(init, _materialized(update_leaves), update_leaves)

@@ -8,14 +8,23 @@ LAMB, Adafactor. Functional API:
 States are pytrees mirroring params (sharding follows params under pjit).
 Adafactor keeps factored second moments — the memory-frugal choice for the
 405B configs (optimizer state bytes dominate HBM there; see EXPERIMENTS).
+
+``update_leaves`` is the fused-update entry: instead of a materialized
+gradient tree it takes ``grad_for(path, param) -> grad leaf`` and walks the
+leaves ONCE, producing each gradient (e.g. clipped sum + shard-local noise,
+``core.policy.noise_leaf_fn``) immediately before its update — so a second
+full-parameter-size gradient copy is never live next to the optimizer
+state. ``update`` keeps the classic materialized-tree contract.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.utils.tree import flatten, unflatten
 
 F32 = jnp.float32
 
@@ -24,10 +33,24 @@ F32 = jnp.float32
 class Optimizer:
     init: Callable
     update: Callable  # (grads, state, params, step) -> (new_params, new_state)
+    # (grad_for, state, params, step) -> (new_params, new_state); None when
+    # the optimizer has no fused path (callers fall back to update)
+    update_leaves: Optional[Callable] = None
 
 
 def _tmap(fn, *trees):
     return jax.tree_util.tree_map(fn, *trees)
+
+
+def _materialized(update_leaves) -> Callable:
+    """The classic update contract as a delegate: one body per optimizer
+    (update_leaves), so the fused and materialized paths cannot diverge."""
+
+    def update(grads, state, params, step):
+        fg = flatten(grads)
+        return update_leaves(lambda path, p: fg[path], state, params, step)
+
+    return update
 
 
 # ---------------------------------------------------------------------- sgd
@@ -35,14 +58,18 @@ def sgd(lr_fn, momentum: float = 0.9, weight_decay: float = 0.0) -> Optimizer:
     def init(params):
         return {"m": _tmap(lambda p: jnp.zeros_like(p, F32), params)}
 
-    def update(grads, state, params, step):
+    def update_leaves(grad_for, state, params, step):
         lr = lr_fn(step)
-        m = _tmap(lambda m_, g: momentum * m_ + g.astype(F32), state["m"], grads)
-        new_p = _tmap(lambda p, m_: (p.astype(F32) - lr * (m_ + weight_decay
-                      * p.astype(F32))).astype(p.dtype), params, m)
-        return new_p, {"m": m}
+        fp, fm = flatten(params), flatten(state["m"])
+        new_p, new_m = {}, {}
+        for path, p in fp.items():
+            m_ = momentum * fm[path] + grad_for(path, p).astype(F32)
+            new_m[path] = m_
+            new_p[path] = (p.astype(F32) - lr * (m_ + weight_decay
+                           * p.astype(F32))).astype(p.dtype)
+        return unflatten(new_p), {"m": unflatten(new_m)}
 
-    return Optimizer(init, update)
+    return Optimizer(init, _materialized(update_leaves), update_leaves)
 
 
 # --------------------------------------------------------------------- adam
@@ -52,24 +79,26 @@ def adamw(lr_fn, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
         z = lambda p: jnp.zeros_like(p, F32)
         return {"m": _tmap(z, params), "v": _tmap(z, params)}
 
-    def update(grads, state, params, step):
+    def update_leaves(grad_for, state, params, step):
         lr = lr_fn(step)
         t = step.astype(F32) + 1.0
-        m = _tmap(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(F32),
-                  state["m"], grads)
-        v = _tmap(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(F32)),
-                  state["v"], grads)
         bc1 = 1.0 - b1 ** t
         bc2 = 1.0 - b2 ** t
-
-        def upd(p, m_, v_):
+        fp = flatten(params)
+        fm, fv = flatten(state["m"]), flatten(state["v"])
+        new_p, new_m, new_v = {}, {}, {}
+        for path, p in fp.items():
+            g = grad_for(path, p).astype(F32)
+            m_ = b1 * fm[path] + (1 - b1) * g
+            v_ = b2 * fv[path] + (1 - b2) * jnp.square(g)
+            new_m[path], new_v[path] = m_, v_
             step_ = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
-            return (p.astype(F32) - lr * (step_ + weight_decay * p.astype(F32))
-                    ).astype(p.dtype)
+            new_p[path] = (p.astype(F32) - lr * (step_ + weight_decay
+                           * p.astype(F32))).astype(p.dtype)
+        return unflatten(new_p), {"m": unflatten(new_m),
+                                  "v": unflatten(new_v)}
 
-        return _tmap(upd, params, m, v), {"m": m, "v": v}
-
-    return Optimizer(init, update)
+    return Optimizer(init, _materialized(update_leaves), update_leaves)
 
 
 # --------------------------------------------------------------------- lamb
@@ -80,26 +109,29 @@ def lamb(lr_fn, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-6,
     def init(params):
         return base.init(params)
 
-    def update(grads, state, params, step):
+    def update_leaves(grad_for, state, params, step):
         lr = lr_fn(step)
         t = step.astype(F32) + 1.0
-        m = _tmap(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(F32),
-                  state["m"], grads)
-        v = _tmap(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(F32)),
-                  state["v"], grads)
         bc1 = 1.0 - b1 ** t
         bc2 = 1.0 - b2 ** t
-
-        def upd(p, m_, v_):
-            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps) + weight_decay * p.astype(F32)
+        fp = flatten(params)
+        fm, fv = flatten(state["m"]), flatten(state["v"])
+        new_p, new_m, new_v = {}, {}, {}
+        for path, p in fp.items():
+            g = grad_for(path, p).astype(F32)
+            m_ = b1 * fm[path] + (1 - b1) * g
+            v_ = b2 * fv[path] + (1 - b2) * jnp.square(g)
+            new_m[path], new_v[path] = m_, v_
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps) \
+                + weight_decay * p.astype(F32)
             pn = jnp.sqrt(jnp.sum(jnp.square(p.astype(F32))))
             un = jnp.sqrt(jnp.sum(jnp.square(u)))
             trust = jnp.where((pn > 0) & (un > 0), pn / un, 1.0)
-            return (p.astype(F32) - lr * trust * u).astype(p.dtype)
+            new_p[path] = (p.astype(F32) - lr * trust * u).astype(p.dtype)
+        return unflatten(new_p), {"m": unflatten(new_m),
+                                  "v": unflatten(new_v)}
 
-        return _tmap(upd, params, m, v), {"m": m, "v": v}
-
-    return Optimizer(init, update)
+    return Optimizer(init, _materialized(update_leaves), update_leaves)
 
 
 # ---------------------------------------------------------------- adafactor
@@ -119,10 +151,12 @@ def adafactor(lr_fn, decay: float = 0.8, eps: float = 1e-30,
 
         return {"s": _tmap(z, params)}
 
-    def update(grads, state, params, step):
+    def update_leaves(grad_for, state, params, step):
         lr = lr_fn(step)
         t = step.astype(F32) + 1.0
         beta = 1.0 - jnp.power(t, -decay)
+        fp = flatten(params)
+        fs = flatten(state["s"])  # leaf paths: <param>/vr|vc or <param>/v
 
         def upd(p, g, s):
             g = g.astype(F32)
@@ -144,15 +178,16 @@ def adafactor(lr_fn, decay: float = 0.8, eps: float = 1e-30,
                     ).astype(p.dtype)
             return newp, ns
 
-        flat_p, tdef = jax.tree_util.tree_flatten(params)
-        flat_g = jax.tree_util.tree_leaves(grads)
-        flat_s = tdef.flatten_up_to(state["s"])
-        outs = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
-        new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
-        new_s = jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs])
-        return new_p, {"s": new_s}
+        new_p, new_s = {}, {}
+        for path, p in fp.items():
+            s = ({"vr": fs[path + "/vr"], "vc": fs[path + "/vc"]}
+                 if _factored(p) else {"v": fs[path + "/v"]})
+            new_p[path], ns = upd(p, grad_for(path, p), s)
+            for k, v in ns.items():
+                new_s[path + "/" + k] = v
+        return unflatten(new_p), {"s": unflatten(new_s)}
 
-    return Optimizer(init, update)
+    return Optimizer(init, _materialized(update_leaves), update_leaves)
 
 
 # ----------------------------------------------------------------- registry

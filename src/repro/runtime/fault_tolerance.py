@@ -94,6 +94,11 @@ class CheckpointManager:
         if not force and (self.every <= 0 or step % self.every != 0):
             return False
         self.wait()
+        # copy-before-donate: the caller's train loop donates its state into
+        # the next step, so snapshot to host SYNCHRONOUSLY here — the async
+        # thread below must never touch device buffers the loop may have
+        # already handed back to XLA
+        state = ckpt.host_snapshot(state)
         if self.async_save and not force:
             self._pending = threading.Thread(
                 target=ckpt.save, args=(self.root, step, state, self.keep))

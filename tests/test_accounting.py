@@ -48,3 +48,58 @@ def test_budget_for_gpt2_e2e_setting():
     assert b.epsilon <= 3.0
     assert 0.3 < b.sigma < 5.0
     assert b.steps == math.ceil(10 * 42000 / 1024)
+
+
+# ------------------------------------------------- tree-aggregation accountant
+def test_tree_node_count():
+    from repro.core.accounting import tree_node_count
+    # one tree over 2^k leaves: root path touches k+1 nodes
+    assert tree_node_count(8) == 4
+    assert tree_node_count(5) == 4            # padded to next_pow2(5) = 8
+    assert tree_node_count(1) == 1
+    # restarts shrink the per-tree height; participations is TOTAL
+    # appearances, never multiplied by the epoch count again
+    assert tree_node_count(100, restart_every=16) == 5
+    assert tree_node_count(100, restart_every=16, participations=7) == 35
+    # multiple passes through ONE tree multiply the touched nodes
+    assert tree_node_count(8, participations=3) == 12
+    assert tree_node_count(0) == 0
+
+
+def test_tree_epsilon_monotone_and_restart_height():
+    from repro.core.accounting import compute_epsilon_tree
+    e = compute_epsilon_tree(2.0, 256, 1e-5)
+    assert e > compute_epsilon_tree(4.0, 256, 1e-5)       # more noise
+    assert e < compute_epsilon_tree(2.0, 4096, 1e-5)      # longer run
+    # at EQUAL participations restarts only shrink the per-tree height
+    assert compute_epsilon_tree(2.0, 256, 1e-5, restart_every=16) < e
+    # ... the multi-epoch cost enters through participations (data passes)
+    assert compute_epsilon_tree(2.0, 256, 1e-5, restart_every=16,
+                                participations=16) > e
+    assert compute_epsilon_tree(0.0, 256, 1e-5) == float("inf")
+
+
+def test_tree_matches_gaussian_closed_form_at_m1():
+    """steps=1 is a single released node: plain Gaussian mechanism."""
+    from repro.core.accounting import compute_epsilon, compute_epsilon_tree
+    # q=1 SGM over 1 step == Gaussian == tree with m=1
+    np.testing.assert_allclose(compute_epsilon_tree(2.0, 1, 1e-5),
+                               compute_epsilon(2.0, 1.0, 1, 1e-5), rtol=1e-9)
+
+
+def test_tree_calibration_roundtrip_and_no_amplification():
+    from repro.core.accounting import calibrate_sigma_tree, compute_epsilon_tree
+    sigma = calibrate_sigma_tree(3.0, 512, 1e-5, restart_every=128)
+    eps = compute_epsilon_tree(sigma, 512, 1e-5, restart_every=128)
+    assert eps <= 3.0 + 1e-6 and eps > 2.5
+    # DP-FTRL gets no subsampling amplification: its sigma for the same
+    # (eps, steps) budget must exceed the q<<1 SGM sigma
+    b_tree = budget_for(3.0, 1e-5, 64, 50000, 1.0, mechanism="tree")
+    b_sgm = budget_for(3.0, 1e-5, 64, 50000, 1.0)
+    assert b_tree.sigma > b_sgm.sigma
+    assert b_tree.mechanism == "tree" and b_sgm.mechanism == "sgm"
+
+
+def test_budget_for_rejects_unknown_mechanism():
+    with pytest.raises(ValueError):
+        budget_for(3.0, 1e-5, 64, 50000, 1.0, mechanism="nope")

@@ -1,0 +1,271 @@
+"""Sharded, donation-clean train step: parity vs single device, shard-local
+noise (slice-sized buffers, determinism, variance), donation safety, and the
+step-benchmark artifact.
+
+Multi-device tests run in a subprocess (XLA_FLAGS must set the fake device
+count before jax's first import), mirroring test_dryrun_small."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str, ndev: int = 8, timeout: int = 560):
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=timeout, cwd=ROOT)
+    assert r.returncode == 0 and "OK" in r.stdout, (r.stdout[-1500:] +
+                                                    r.stderr[-3000:])
+    return r.stdout
+
+
+PARITY = textwrap.dedent("""
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.configs.registry import build, smoke_config
+    from repro.core.bk import DPConfig
+    from repro.data.pipeline import Pipeline, PipelineConfig
+    from repro.launch.steps import TrainState, make_train_step
+    from repro.optim.optimizers import make_optimizer
+    from repro.utils.tree import flatten
+
+    assert len(jax.devices()) == 8
+    cfg = smoke_config("qwen2-1.5b").with_(dtype="float32",
+                                           param_dtype="float32")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    pipe = Pipeline(cfg, PipelineConfig(8, 16, seed=0))
+    # sigma=0: the full clipping pipeline runs but parity is noise-free
+    # (shard-local noise is keyed per shard, so sigma>0 runs are
+    # statistically — not bitwise — identical across meshes)
+    dp = DPConfig(mode="bk-mixopt", sigma=0.0)
+
+    def run(mesh, microbatch, steps=3):
+        opt = make_optimizer("adamw", lambda s: jnp.asarray(1e-3, jnp.float32))
+        fn, state_sh, batch_sh = make_train_step(
+            model.apply, params, opt, "adamw", dp, microbatch, mesh,
+            pipe.batch(0))
+        jitted = jax.jit(fn, in_shardings=(state_sh, batch_sh),
+                         out_shardings=(state_sh, None), donate_argnums=(0,))
+        # device_put to an ALREADY-matching sharding aliases the buffers;
+        # copy first so this run's donation cannot delete the shared init
+        p0 = jax.tree_util.tree_map(lambda x: jnp.array(x, copy=True), params)
+        state = TrainState(params=jax.device_put(p0, state_sh.params),
+                           opt_state=jax.device_put(opt.init(p0),
+                                                    state_sh.opt_state),
+                           step=jnp.asarray(0, jnp.int32),
+                           rng=jax.random.PRNGKey(1))
+        for step in range(steps):
+            batch = jax.device_put(pipe.batch(step), batch_sh)
+            state, loss = jitted(state, batch)
+        return jax.device_get(state.params), float(loss)
+
+    mesh8 = jax.make_mesh((4, 2), ("data", "model"))
+    mesh1 = jax.make_mesh((1, 1), ("data", "model"),
+                          devices=jax.devices()[:1])
+    for mb in (0, 4):   # full batch AND the microbatch lax.scan path
+        p8, l8 = run(mesh8, mb)
+        p1, l1 = run(mesh1, mb)
+        for k, v in flatten(p1).items():
+            # 3 adamw steps amplify cross-shard reduction-order fp noise
+            # through the scale-free m/sqrt(v); observed worst ~4e-6 abs
+            np.testing.assert_allclose(np.asarray(flatten(p8)[k]),
+                                       np.asarray(v), rtol=1e-3, atol=1e-5,
+                                       err_msg=f"mb={mb} {k}")
+        assert abs(l8 - l1) < 1e-4, (mb, l8, l1)
+    print("OK parity")
+""")
+
+
+def test_sharded_step_matches_single_device():
+    """Same seed => numerically matching params after N donated steps on a
+    (4 data x 2 model) mesh vs a single device, full-batch and microbatched."""
+    _run(PARITY)
+
+
+NOISE_HLO = textwrap.dedent("""
+    import re
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core.bk import DPConfig
+    from repro.core.policy import as_policy, finalize_noise, resolve_policy
+    from repro.launch import sharding as sh
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    # 'head/w' shards ('data','model') -> per-device slice (16, 24)
+    params = {"head": {"w": jnp.zeros((64, 48))}}
+    pspecs = sh.flat_param_pspecs(params, mesh)
+    assert tuple(pspecs["head/w"]) == ("data", "model"), pspecs
+    policy = as_policy(DPConfig(mode="bk", sigma=1.0, R=1.0))
+    res = resolve_policy(policy, ["head/w"])
+
+    def noised(sums, rng):
+        return finalize_noise(policy, res, sums, rng, 1.0, mesh=mesh,
+                              pspecs=pspecs)
+
+    ssh = {"head/w": NamedSharding(mesh, pspecs["head/w"])}
+    f = jax.jit(noised, in_shardings=(ssh, None))
+    sums = jax.device_put({"head/w": jnp.zeros((64, 48))}, ssh)
+    rng = jax.random.PRNGKey(3)
+    txt = f.lower(sums, rng).compile().as_text()
+    # the SPMD-partitioned program must hold ONLY slice-sized f32 buffers:
+    # a replicated full-param noise tensor would show up as f32[64,48]
+    assert "f32[16,24]" in txt, txt[:2000]
+    assert "f32[64,48]" not in txt
+    assert "f32[3072]" not in txt  # nor a flattened full-size draw
+
+    # determinism: same (key, mesh) -> bitwise-identical shard-local noise
+    n1 = np.asarray(f(sums, rng)["head/w"])
+    n2 = np.asarray(f(sums, rng)["head/w"])
+    np.testing.assert_array_equal(n1, n2)
+    # moments: mean 0, std sigma * S (= 1.0 here) over the full tensor
+    assert abs(n1.mean()) < 0.1 and abs(n1.std() - 1.0) < 0.1, \
+        (n1.mean(), n1.std())
+    # distinct shards draw from distinct fold_in keys
+    assert not np.array_equal(n1[:16, :24], n1[16:32, :24])
+    print("OK noise hlo")
+""")
+
+
+def test_shard_local_noise_slice_sized_hlo():
+    """No replicated full-param noise: every f32 buffer in the lowered
+    finalize_noise program is per-device slice-sized; draws are
+    deterministic with correct moments and differ across shards."""
+    _run(NOISE_HLO)
+
+
+NOISE_DEVCOUNT = textwrap.dedent("""
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.core.noise import sharded_normal
+
+    rng = jax.random.PRNGKey(5)
+    shape = (64, 32)
+    draws = {}
+    from jax.sharding import PartitionSpec as P
+    for nd in (1, 2, 8):
+        mesh = jax.make_mesh((nd, 1), ("data", "model"),
+                             devices=jax.devices()[:nd])
+        x = np.asarray(sharded_normal(rng, shape, mesh=mesh,
+                                      spec=P("data", None)))
+        draws[nd] = x
+        # unit variance at every device count
+        assert abs(x.mean()) < 0.1 and abs(x.std() - 1.0) < 0.1, (nd, x.std())
+        # deterministic per (key, mesh)
+        y = np.asarray(sharded_normal(rng, shape, mesh=mesh,
+                                      spec=P("data", None)))
+        np.testing.assert_array_equal(x, y)
+    # single-shard path degrades to the plain (replicated) draw
+    np.testing.assert_array_equal(
+        draws[1], np.asarray(jax.random.normal(rng, shape)))
+    # non-divisible dims fall back rather than mis-shard
+    z = sharded_normal(rng, (63, 32), mesh=jax.make_mesh(
+        (8, 1), ("data", "model")), spec=P("data", None))
+    assert z.shape == (63, 32)
+    print("OK devcounts")
+""")
+
+
+def test_shard_local_noise_determinism_across_device_counts():
+    """Variance and determinism of the per-shard fold_in keys at 1/2/8
+    shards, plus the graceful fallbacks."""
+    _run(NOISE_DEVCOUNT)
+
+
+def test_donated_step_checkpoint_safety(tmp_path):
+    """The step donates the whole TrainState; a checkpoint save issued
+    right after a step (async writer) must still see valid arrays — the
+    copy-before-donate snapshot happens synchronously in maybe_save."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.checkpoint import checkpoint as ckpt
+    from repro.configs.registry import build, smoke_config
+    from repro.core.bk import DPConfig
+    from repro.data.pipeline import Pipeline, PipelineConfig
+    from repro.launch.mesh import make_train_mesh
+    from repro.launch.steps import TrainState, make_train_step
+    from repro.optim.optimizers import make_optimizer
+    from repro.runtime.fault_tolerance import CheckpointManager
+    from repro.utils.tree import flatten
+
+    cfg = smoke_config("qwen2-1.5b").with_(dtype="float32",
+                                           param_dtype="float32")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = make_optimizer("adamw", lambda s: jnp.asarray(1e-3, jnp.float32))
+    mesh = make_train_mesh()
+    pipe = Pipeline(cfg, PipelineConfig(4, 16, seed=0))
+    fn, state_sh, batch_sh = make_train_step(
+        model.apply, params, opt, "adamw", DPConfig(mode="bk", sigma=0.1), 0,
+        mesh, pipe.batch(0))
+    jitted = jax.jit(fn, in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, None), donate_argnums=(0,))
+    # commit the initial state to the step's shardings: an uncommitted
+    # state would be COPIED to match in_shardings and only the copy donated
+    state = TrainState(params=jax.device_put(params, state_sh.params),
+                       opt_state=jax.device_put(opt.init(params),
+                                                state_sh.opt_state),
+                       step=jnp.asarray(0, jnp.int32),
+                       rng=jax.random.PRNGKey(1))
+
+    mgr = CheckpointManager(str(tmp_path), every=1, keep=2)
+    for step in range(2):
+        old = state
+        state, loss = jitted(state, jax.device_put(pipe.batch(step),
+                                                   batch_sh))
+        # donation really happened: the consumed state's buffers are gone
+        assert jax.tree_util.tree_leaves(old.params)[0].is_deleted()
+        # async save of the NEW state while the next step will donate it
+        mgr.maybe_save(step, {"params": state.params,
+                              "opt": state.opt_state,
+                              "step": np.asarray(step)})
+        old = state
+    mgr.wait()
+    restored, rstep = ckpt.restore(str(tmp_path))
+    assert rstep == 1
+    live = flatten(jax.device_get(state.params))
+    for k, v in flatten(restored["params"]).items():
+        assert np.all(np.isfinite(v)), k
+        np.testing.assert_array_equal(v, np.asarray(live[k]), err_msg=k)
+
+
+def test_host_snapshot_copies_out_of_device():
+    """ckpt.host_snapshot returns plain numpy even for donated-soon arrays."""
+    import jax.numpy as jnp
+
+    from repro.checkpoint.checkpoint import host_snapshot
+
+    snap = host_snapshot({"a": {"w": jnp.ones((3, 3))}, "s": jnp.asarray(4)})
+    assert isinstance(snap["a"]["w"], np.ndarray)
+    assert snap["s"] == 4
+
+
+BENCH = os.path.join(ROOT, "BENCH_step.json")
+
+
+@pytest.mark.skipif(not os.path.exists(BENCH),
+                    reason="BENCH_step.json not generated yet "
+                           "(benchmarks.step_bench writes it; ci.sh runs it)")
+def test_step_bench_artifact_schema():
+    """The committed step-level baseline covers >= 2 modes x >= 2 device
+    counts with tokens/s and peak-HBM cells."""
+    with open(BENCH) as f:
+        data = json.load(f)
+    cells = data["cells"]
+    modes = {c["mode"] for c in cells}
+    devs = {c["devices"] for c in cells}
+    assert len(modes) >= 2, modes
+    assert len(devs) >= 2, devs
+    for c in cells:
+        assert c["tokens_per_s"] > 0
+        assert c["steps_per_s"] > 0
+        assert c["peak_hbm_bytes"]["total"] > 0
