@@ -1,8 +1,9 @@
 """Step-level train benchmark: the REAL jitted, donated, mesh-lowered train
-step (launch.steps.make_train_step) per (dp mode x device count).
+step (launch.steps.make_train_step) per (dp mode x tape policy x device
+count), with a regression gate against the committed baseline.
 
     PYTHONPATH=src python -m benchmarks.step_bench [--fast]
-    PYTHONPATH=src python -m benchmarks.step_bench --cell bk-mixopt 8 [--fast]
+    PYTHONPATH=src python -m benchmarks.step_bench --cell bk-mixopt 8 native
 
 The parent process spawns one subprocess per device count (XLA_FLAGS'
 --xla_force_host_platform_device_count must be set before jax imports), and
@@ -14,13 +15,20 @@ merges the per-cell records into ``BENCH_step.json``:
                                argument + output + temp bytes (and XLA's own
                                peak estimate when the backend reports one);
   cost                         utils.hlo.xla_cost_analysis(compiled) —
-                               flops / bytes accessed per device.
+                               flops / bytes accessed per device;
+  tape                         the tape residency policy the cell ran
+                               (bk-mixopt runs one cell per policy at 1
+                               device — the temp-HBM column IS the held
+                               book-kept state the residency manager frees).
 
-On CPU the wall numbers are correctness-path (Pallas interpret mode), not a
-TPU projection — the tracked signal is the per-device memory trajectory
-(sharded state + slice-sized noise vs replicated) and the mode-vs-mode /
-1-vs-N-device ratios. Kernel microbenches live in kernel_bench.py; this file
-is the end-to-end step truth the perf trajectory was missing.
+Gate: when a same-backend ``BENCH_step.json`` already exists (the committed
+baseline), matching cells regress the run if tokens/s drops or per-device
+peak-HBM (argument+output+temp) rises by more than STEP_GATE_TOL (default
+10%). STEP_GATE=0 disables; new cells without a baseline counterpart only
+report. On CPU the wall numbers are correctness-path (Pallas interpret
+mode), not a TPU projection — the tracked signal is the per-device memory
+trajectory and the mode/tape/device ratios. Kernel microbenches live in
+kernel_bench.py; this file is the end-to-end step truth.
 """
 from __future__ import annotations
 
@@ -30,12 +38,27 @@ import subprocess
 import sys
 import time
 
-MODES = ("nonprivate", "bk-mixopt")
-DEVICE_COUNTS = (1, 8)
+# (mode, tape policy, device count, config profile). 'smoke' is the
+# committed-baseline geometry (2 layers — residency constants dominate, so
+# only bf16 wins there); 'deep' (8 layers, d=64, T=64) is where the
+# book-kept state dominates and the residency manager's asymptotics show.
+CELLS = (
+    ("nonprivate", "native", 1, "smoke"),
+    ("bk-mixopt", "native", 1, "smoke"),
+    ("bk-mixopt", "bf16", 1, "smoke"),
+    ("bk-mixopt", "int8", 1, "smoke"),
+    ("bk-mixopt", "recompute", 1, "smoke"),
+    ("nonprivate", "native", 8, "smoke"),
+    ("bk-mixopt", "native", 8, "smoke"),
+    ("bk-mixopt", "native", 1, "deep"),
+    ("bk-mixopt", "bf16", 1, "deep"),
+    ("bk-mixopt", "recompute", 1, "deep"),
+)
 OUT = "BENCH_step.json"
 
 
-def run_cell(mode: str, ndev: int, fast: bool) -> dict:
+def run_cell(mode: str, ndev: int, fast: bool, tape: str = "native",
+             profile: str = "smoke") -> dict:
     import jax
     import jax.numpy as jnp
 
@@ -51,10 +74,14 @@ def run_cell(mode: str, ndev: int, fast: bool) -> dict:
     B, T, steps = (8, 32, 3) if fast else (16, 64, 10)
     cfg = smoke_config("qwen2-1.5b").with_(dtype="float32",
                                            param_dtype="float32")
+    if profile == "deep":
+        cfg = cfg.with_(n_layers=8, d_model=64, d_ff=96, max_t=128)
+        T = 64
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
     opt = make_optimizer("adamw", lambda s: jnp.asarray(1e-3, jnp.float32))
-    dp = DPConfig(mode=mode, sigma=0.0 if mode == "nonprivate" else 0.5)
+    dp = DPConfig(mode=mode, sigma=0.0 if mode == "nonprivate" else 0.5,
+                  tape_policy=tape, tape_chunks=2)
     mesh = make_train_mesh(ndev, 1)
     pipe = Pipeline(cfg, PipelineConfig(B, T, seed=0))
 
@@ -85,7 +112,8 @@ def run_cell(mode: str, ndev: int, fast: bool) -> dict:
     elapsed = time.perf_counter() - t0
 
     return {
-        "mode": mode, "devices": ndev, "mesh": dict(mesh.shape),
+        "mode": mode, "devices": ndev, "tape": tape, "profile": profile,
+        "mesh": dict(mesh.shape),
         "backend": jax.default_backend(),
         "interpret_kernels": jax.default_backend() != "tpu",
         "batch": B, "seq": T, "steps": steps,
@@ -104,42 +132,113 @@ def run_cell(mode: str, ndev: int, fast: bool) -> dict:
     }
 
 
+def _load_baseline(backend: str, fast: bool):
+    """The committed BENCH_step.json, iff it matches this run's backend and
+    batch geometry (a cross-backend or fast-vs-full comparison gates
+    nothing)."""
+    if not os.path.exists(OUT):
+        return None
+    try:
+        with open(OUT) as f:
+            base = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+    if base.get("backend") != backend or base.get("fast") != fast:
+        return None
+    return {(c["mode"], c.get("tape", "native"), c["devices"],
+             c.get("profile", "smoke")): c
+            for c in base.get("cells", [])}
+
+
+def gate(cells: list, baseline: dict) -> list:
+    """-> list of regression strings. A cell regresses when per-device
+    peak-HBM rises by more than STEP_GATE_TOL (default 10% — the memory
+    numbers are deterministic per backend) or tokens/s drops by more than
+    STEP_GATE_TOKS_TOL (defaults to STEP_GATE_TOL; ci.sh widens it on CPU,
+    where 3-step interpret-mode wall clocks jitter far past 10%) vs its
+    same-(mode, tape, devices, profile) baseline cell."""
+    tol = float(os.environ.get("STEP_GATE_TOL", "0.10"))
+    toks_tol = float(os.environ.get("STEP_GATE_TOKS_TOL", str(tol)))
+    bad = []
+    for c in cells:
+        key = (c["mode"], c.get("tape", "native"), c["devices"],
+               c.get("profile", "smoke"))
+        b = baseline.get(key)
+        if b is None:
+            continue
+        name = f"{key[0]}/{key[1]}/{key[3]} x {key[2]}dev"
+        if c["tokens_per_s"] < b["tokens_per_s"] * (1 - toks_tol):
+            bad.append(f"{name}: tokens/s {c['tokens_per_s']:.0f} < "
+                       f"baseline {b['tokens_per_s']:.0f} - {toks_tol:.0%}")
+        got_hbm = c["peak_hbm_bytes"]["total"]
+        base_hbm = b["peak_hbm_bytes"]["total"]
+        if got_hbm > base_hbm * (1 + tol):
+            bad.append(f"{name}: peak-HBM/dev {got_hbm} > "
+                       f"baseline {base_hbm} + {tol:.0%}")
+    return bad
+
+
 def main(argv) -> int:
     fast = "--fast" in argv
     if "--cell" in argv:
         i = argv.index("--cell")
         mode, ndev = argv[i + 1], int(argv[i + 2])
-        print("CELL_JSON " + json.dumps(run_cell(mode, ndev, fast)))
+        rest = [a for a in argv[i + 3:] if not a.startswith("--")]
+        tape = rest[0] if rest else "native"
+        profile = rest[1] if len(rest) > 1 else "smoke"
+        print("CELL_JSON " + json.dumps(run_cell(mode, ndev, fast, tape,
+                                                 profile)))
         return 0
 
     cells = []
-    for ndev in DEVICE_COUNTS:
+    baseline = None
+    for mode, tape, ndev, profile in CELLS:
         env = dict(os.environ)
         env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
                             + f" --xla_force_host_platform_device_count={ndev}"
                             ).strip()
         env["PYTHONPATH"] = "src" + (os.pathsep + env["PYTHONPATH"]
                                      if env.get("PYTHONPATH") else "")
-        for mode in MODES:
-            cmd = [sys.executable, "-m", "benchmarks.step_bench",
-                   "--cell", mode, str(ndev)] + (["--fast"] if fast else [])
-            r = subprocess.run(cmd, capture_output=True, text=True, env=env,
-                               timeout=1800)
-            line = next((ln for ln in r.stdout.splitlines()
-                         if ln.startswith("CELL_JSON ")), None)
-            if r.returncode != 0 or line is None:
-                print(f"[ERR ] {mode} x {ndev}dev:\n{r.stdout[-800:]}"
-                      f"{r.stderr[-2000:]}")
-                return 1
-            cell = json.loads(line[len("CELL_JSON "):])
-            cells.append(cell)
-            hbm = cell["peak_hbm_bytes"]["total"] / 2**20
-            print(f"[ok] {mode:>11} x {ndev}dev  "
-                  f"{cell['tokens_per_s']:>8.0f} tok/s  "
-                  f"{cell['steps_per_s']:>6.2f} steps/s  "
-                  f"hbm/dev {hbm:>7.1f} MiB")
+        cmd = [sys.executable, "-m", "benchmarks.step_bench",
+               "--cell", mode, str(ndev), tape, profile] \
+            + (["--fast"] if fast else [])
+        r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                           timeout=1800)
+        line = next((ln for ln in r.stdout.splitlines()
+                     if ln.startswith("CELL_JSON ")), None)
+        if r.returncode != 0 or line is None:
+            print(f"[ERR ] {mode}/{tape}/{profile} x {ndev}dev:\n"
+                  f"{r.stdout[-800:]}{r.stderr[-2000:]}")
+            return 1
+        cell = json.loads(line[len("CELL_JSON "):])
+        if baseline is None:
+            # read the committed file ONCE, before this run overwrites it
+            baseline = _load_baseline(cell["backend"], fast) or {}
+        cells.append(cell)
+        hbm = cell["peak_hbm_bytes"]["total"] / 2**20
+        temp = cell["peak_hbm_bytes"]["temp"] / 2**20
+        print(f"[ok] {mode:>11}/{tape:<9}/{profile:<5} x {ndev}dev  "
+              f"{cell['tokens_per_s']:>8.0f} tok/s  "
+              f"{cell['steps_per_s']:>6.2f} steps/s  "
+              f"hbm/dev {hbm:>6.2f} MiB (temp {temp:.2f})")
 
     out = {"backend": cells[0]["backend"], "fast": fast, "cells": cells}
+    if os.environ.get("STEP_GATE", "1") != "0" and baseline:
+        # gate BEFORE overwriting: a failing run must not replace the
+        # committed baseline it regressed against (the regressed cells go
+        # to a side file for inspection instead)
+        bad = gate(cells, baseline)
+        if bad:
+            for b in bad:
+                print(f"[GATE] REGRESSION {b}")
+            with open(OUT + ".regressed", "w") as f:
+                json.dump(out, f, indent=2)
+            print(f"kept {OUT} (baseline); regressed cells in "
+                  f"{OUT}.regressed")
+            return 2
+        print(f"[GATE] ok: {len(cells)} cells within "
+              f"{float(os.environ.get('STEP_GATE_TOL', '0.10')):.0%} of the "
+              "committed baseline")
     with open(OUT, "w") as f:
         json.dump(out, f, indent=2)
     print(f"wrote {OUT} ({len(cells)} cells)")

@@ -15,9 +15,14 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 BASELINE="${TIER1_BASELINE_FAILURES:-0}"
-# floor excludes tests/test_sharded_step.py (6 tests): it gates in its own
-# dedicated stage below
-PASS_FLOOR="${TIER1_BASELINE_PASSED:-290}"
+# floor excludes tests/test_sharded_step.py (8 tests): it gates in its own
+# dedicated stage below. PR 5 added tests/test_tape_residency.py (32) and
+# tests/test_compression.py (10 without hypothesis): counted suite is 332
+# when hypothesis is absent. The floor sits 4 below that because installing
+# hypothesis REPLACES test_compression's 5 parametrized fallback cases with
+# 1 @given test (net -4 there, while unskipping test_ghost_properties adds
+# tests) — the floor must not fail a fuller environment.
+PASS_FLOOR="${TIER1_BASELINE_PASSED:-328}"
 LOG="$(mktemp)"
 trap 'rm -f "$LOG"' EXIT
 
@@ -62,10 +67,16 @@ echo "== benchmarks: kernel bench (--fast) =="
 python -m benchmarks.kernel_bench --fast
 kern=$?
 
-echo "== benchmarks: step bench (--fast, writes BENCH_step.json) =="
-# gate only on the bench RUNNING (a perf regression gate needs a second
-# trajectory point first — the committed BENCH_step.json is that baseline)
-python -m benchmarks.step_bench --fast
+echo "== benchmarks: step bench (--fast, writes BENCH_step.json, gated) =="
+# GATES against the committed same-backend BENCH_step.json (per-cell tape
+# policy recorded): per-device peak-HBM regression > 10% fails (memory is
+# deterministic); tokens/s gets a wide 50% band here because 3-step CPU
+# interpret-mode wall clocks jitter ~40% run-to-run with machine load —
+# the wall gate is a catastrophe detector on CPU, the real throughput gate
+# engages on accelerator backends (STEP_GATE=0 disables, STEP_GATE_TOL /
+# STEP_GATE_TOKS_TOL tune). A failing gate keeps the committed file and
+# writes BENCH_step.json.regressed for inspection.
+STEP_GATE_TOKS_TOL="${STEP_GATE_TOKS_TOL:-0.5}" python -m benchmarks.step_bench --fast
 stepb=$?
 
 echo "ci summary: tier1=$tier1 (passed=$passed failed=$failed baseline=$BASELINE) sharded=$sharded bench=$bench kernel_bench=$kern step_bench=$stepb"

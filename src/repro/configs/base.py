@@ -102,6 +102,10 @@ class TrainConfig:
     #   "auto" — on for real accelerators, off on CPU (interpret mode)
     #   "on" / "off"
     autotune: str = "auto"
+    # tape residency override (core.tape.TAPE_POLICIES): "" keeps whatever
+    # the DPConfig / policy preset configured; tape_chunks 0 likewise
+    tape: str = ""
+    tape_chunks: int = 0
 
 
 @dataclass(frozen=True)

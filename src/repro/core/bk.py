@@ -43,7 +43,7 @@ from repro.core import ghost
 from repro.core.clipping import get_clip_fn
 from repro.core.policy import (as_policy, finalize_noise, norm_aux,
                                resolve_policy, unit_clip_factors)
-from repro.core.tape import Tape, parse_key
+from repro.core.tape import Tape, load_record, parse_key, store_record
 from repro.utils.tree import flatten, unflatten
 
 F32 = jnp.float32
@@ -104,6 +104,10 @@ class DPConfig:
     mode: str = "bk"                 # implementation (BK_MODES + baselines)
     use_kernels: bool = True         # fused Pallas kernels via kernels.dispatch
     gamma: float = 0.01              # automatic-clipping stability constant
+    tape_policy: str = "native"      # tap-record residency between phases 2-3
+                                     # (core.tape.TAPE_POLICIES: native | bf16
+                                     # | int8 | recompute | auto)
+    tape_chunks: int = 1             # phase-3 re-derivation chunks (recompute)
 
     def clip_fn(self) -> Callable:
         kw = {"gamma": self.gamma} if self.clipping == "automatic" else {}
@@ -117,13 +121,23 @@ def batch_size_of(batch: dict) -> int:
 
 def tap_structs(apply_fn, params, batch):
     """Tap zero-structure via one (free) eval_shape pass."""
+    return tap_act_structs(apply_fn, params, batch)[0]
+
+
+def tap_act_structs(apply_fn, params, batch):
+    """-> (tap zero structure, activation-record structure), one free
+    eval_shape pass (the residency planner needs both shapes)."""
 
     def shape_run(p, b):
         tape = Tape(None)
         apply_fn(p, b, tape)
-        return tape.tap_zeros
+        return tape.tap_zeros, tape.acts
 
     return jax.eval_shape(shape_run, params, batch)
+
+
+def _tap_w(key: str) -> str:
+    return parse_key(key)[0] + "/w"
 
 
 def split_param_paths(params, tap_struct):
@@ -145,7 +159,8 @@ def split_param_paths(params, tap_struct):
 
 # ------------------------------------------------------------- norm dispatch
 def record_sq_norm(key: str, act, ds, mode: str, use_kernels: bool,
-                   method: str = "", mesh=None, shard=None):
+                   method: str = "", mesh=None, shard=None,
+                   allow_cache: bool = True):
     """Per-sample squared norm for one tapped op.
 
     Every kind routes through kernels.dispatch: the plan fixes ghost-vs-direct
@@ -153,7 +168,10 @@ def record_sq_norm(key: str, act, ds, mode: str, use_kernels: bool,
     ``method`` override wins over both) and, when ``use_kernels``, whether the
     fused Pallas kernel or the jnp einsum runs plus its block sizes. Returns
     (sq_norms (B,), cached) where cached optionally carries the instantiated
-    per-sample grads for mixopt reuse in phase 3.
+    per-sample grads for mixopt reuse in phase 3. ``allow_cache=False``
+    suppresses that instantiation — mixopt's cache is itself a residency
+    decision, and a non-native tape policy overrides it (the streamed
+    engine then holds the compressed cotangent, or nothing, instead).
 
     With ``shard`` = (batch_axes, n) the kernel runs inside a shard_map on
     its local batch slice (the plan is fitted to the LOCAL shapes, matching
@@ -185,7 +203,7 @@ def record_sq_norm(key: str, act, ds, mode: str, use_kernels: bool,
         # the cache lives batch-sharded: its footprint (and the decision to
         # keep it) is per-device, like the kernel plans above
         small = L * (B // n) * d * p <= ghost.MAP_THRESHOLD
-        if mode == "bk-mixopt" and small:
+        if mode == "bk-mixopt" and small and allow_cache:
             # mixopt's defining move (paper Sec 3.3): instantiate once, reuse
             # for module 5 in phase 3. Takes precedence over the fused kernel
             # — the kernel saves the per-sample-grad space, but mixopt chose
@@ -320,21 +338,22 @@ def record_weighted_grad(key: str, act, ds, C, cached, use_kernels: bool,
 def plan_report(apply_fn, params, batch, cfg) -> dict:
     """Resolved kernel-dispatch plans per tap, from one free eval_shape pass.
 
-    -> {tap_key: {'norm': Plan, 'grad': Plan}} — observability for the
-    engine/benchmarks; no compute. Policy-aware: frozen-group taps are
-    absent from the report (they emit no norm/grad work at all) and
-    per-group method overrides show up in the norm plan."""
+    -> {tap_key: {'norm': Plan, 'grad': Plan, 'tape': TapePlan}} —
+    observability for the engine/benchmarks; no compute. Policy-aware:
+    frozen-group taps are absent from the report (they emit no norm/grad
+    work at all), per-group method overrides show up in the norm plan, and
+    the 'tape' entry is the tap's resolved residency decision (group
+    ``tape`` override / policy ``tape_policy`` / planner 'auto') with its
+    held-bytes and re-derivation-FLOPs cost numbers."""
     from repro.kernels import dispatch
     policy = as_policy(cfg)
 
-    def shape_run(p, b):
-        tape = Tape(None)
-        apply_fn(p, b, tape)
-        return tape.tap_zeros, tape.acts
-
-    taps, acts = jax.eval_shape(shape_run, params, batch)
+    taps, acts = tap_act_structs(apply_fn, params, batch)
     flat_params = flatten(params)
     res = resolve_policy(policy, flat_params)
+    tape_pol = resolve_tape(policy, res,
+                            {k: taps[k] for k in taps
+                             if _tap_w(k) not in res.frozen}, acts)
     report = {}
     for key in sorted(acts):
         path, kind, _ = parse_key(key)
@@ -350,13 +369,80 @@ def plan_report(apply_fn, params, batch, cfg) -> dict:
         }
         if not policy.use_kernels:  # report what will actually run
             plans = {k: replace(p, impl="jnp") for k, p in plans.items()}
+        plans["tape"] = dispatch.tape_plan(kind, a_shape, taps[key].shape,
+                                           tape_pol[key],
+                                           itemsize=taps[key].dtype.itemsize)
         report[key] = plans
     return report
 
 
+# --------------------------------------------------------- tape residency
+def pad_batch(batch, mesh, B: int):
+    """-> (batch, mask | None, B_padded).
+
+    Pads the batch to the next multiple of the mesh's batch-shard count so
+    the shard_map'd kernel path engages on non-divisible batches (instead of
+    silently falling back to GSPMD over the jnp einsums). ``mask`` (B_pad,)
+    f32 marks real samples; it folds into the per-sample loss SUM (zeroing
+    every pad cotangent at the source) and into the clip factors (belt and
+    braces — pad cotangents are exact zeros already).
+
+    Pad rows REPEAT the last real sample via a gather rather than appending
+    zeros with a concatenate: the SPMD partitioner mis-lowers an in-graph
+    concat whose operand does not divide the batch axes (observed: real
+    rows turn NaN once the per-sample-param constraint forces data
+    sharding), and repeated real rows are also numerically safe for models
+    whose loss degenerates on all-zero samples."""
+    if mesh is None:
+        return batch, None, B
+    ba = mesh_batch_axes(mesh)
+    n = 1
+    for a in ba:
+        n *= mesh.shape[a]
+    if n <= 1 or B % n == 0:
+        return batch, None, B
+    B_pad = -(-B // n) * n
+    idx = jnp.minimum(jnp.arange(B_pad), B - 1)
+    batch = jax.tree_util.tree_map(lambda x: jnp.take(x, idx, axis=0), batch)
+    mask = (jnp.arange(B_pad) < B).astype(F32)
+    return batch, mask, B_pad
+
+
+def resolve_tape(policy, res, tap_struct, act_struct) -> dict:
+    """Per-active-tap storage decision: the ``REPRO_TAPE`` force env wins
+    outright (the same knob the planner/report honor — the engine must
+    agree with what kernel_report claims), then the ParamGroup ``tape``
+    override, then the policy-level ``tape_policy``, with 'auto' resolved
+    by the dispatch residency planner (kernels.dispatch.tape_plan)."""
+    import os
+
+    from repro.kernels import dispatch
+    force = os.environ.get("REPRO_TAPE", "")
+    out = {}
+    for key in sorted(tap_struct):
+        wpath = _tap_w(key)
+        if wpath in res.frozen:
+            continue
+        pol = force or res.group_of[wpath].tape or policy.tape_policy
+        if pol == "auto":
+            _, kind, _ = parse_key(key)
+            a = (act_struct[key]["a"].shape if kind == "moe"
+                 else act_struct[key].shape)
+            pol = dispatch.tape_plan(
+                kind, a, tap_struct[key].shape,
+                itemsize=tap_struct[key].dtype.itemsize).store
+        out[key] = pol
+    return out
+
+
+def _act_dtype(struct):
+    return struct["a"].dtype if isinstance(struct, dict) else struct.dtype
+
+
 # ------------------------------------------------------------------- BK core
-def bk_clipped_sum(apply_fn, params, batch, cfg, mesh=None):
-    """Phases 1-3 of BK: the pre-noise clipped gradient SUM (flat dict).
+def bk_clipped_sum(apply_fn, params, batch, cfg, mesh=None, rng=None):
+    """Phases 1-3 of BK: the pre-noise clipped gradient SUM (flat dict),
+    with managed tape residency.
 
     ``cfg`` is a DPConfig or PrivacyPolicy; each clipping unit of the
     resolved policy gets its own per-sample norm accumulator and clip factor
@@ -364,15 +450,218 @@ def bk_clipped_sum(apply_fn, params, batch, cfg, mesh=None):
     even requested — XLA never builds their book-keeping), and their grads
     come back as zeros.
 
+    The backward is STREAMED, not hoarded: phase 1 linearizes the forward
+    once and runs ONE transposed sweep for the cotangents; each tap's
+    cotangent is consumed by its phase-2 norm as it is produced and then
+    HELD per the tap's residency policy (``tape_policy`` / per-group
+    ``tape``) — native (today's bitwise path), bf16/int8 compressed
+    (runtime.compression stochastic rounding; norms stay fp32), or not at
+    all ('recompute': NOTHING survives phase 2 for the tap — phase 3
+    re-derives its weighted gradient with a reweighted-loss backward,
+    one fresh forward + backward per chunk, rematting at the models' own
+    jax.checkpoint scan-block boundaries; the extra forward is the
+    ghost-clipping cost, see the phase-3 comment for why a residual-
+    reusing transpose is worse). Each recompute chunk's backward is seeded
+    through an optimization barrier carrying the clip factors, so phase
+    2's cotangents are dead before any re-derivation runs. ``rng`` keys
+    int8 stochastic rounding (path-stable folds; a fixed key when
+    omitted).
+
     This is the accumulation unit for the physical/logical batch split
     (paper footnote 2): sum over microbatches, then noise ONCE per logical
     batch. Returns (flat_sums, aux).
 
-    Under ``mesh`` (batch axes dividing B) the whole per-sample pipeline
-    stays batch-sharded: per-sample vector-param broadcasts, squared-norm
-    accumulators, clip factors and losses all live at B_local per device;
-    fused kernels run shard_map'd on their local slice, and each weighted
-    gradient pays exactly one psum across the batch axes."""
+    Under ``mesh`` the whole per-sample pipeline stays batch-sharded:
+    per-sample vector-param broadcasts, squared-norm accumulators, clip
+    factors and losses all live at B_local per device; fused kernels run
+    shard_map'd on their local slice, and each weighted gradient pays
+    exactly one psum across the batch axes. Batches that do NOT divide the
+    batch-shard count are padded with masked samples (``pad_batch``) so the
+    kernel path still engages."""
+    from repro.core.noise import _path_rng
+    policy = as_policy(cfg)
+    assert policy.mode in BK_MODES, policy.mode
+    B_real = batch_size_of(batch)
+    batch, mask, B = pad_batch(batch, mesh, B_real)
+    shard = batch_shard(mesh, B)
+    ba = shard[0] if shard else ()
+    flat_params = flatten(params)
+    tap_struct, act_struct = tap_act_structs(apply_fn, params, batch)
+    _, psp_paths = split_param_paths(params, tap_struct)
+    res = resolve_policy(policy, flat_params)
+
+    active_taps = sorted(k for k in tap_struct if _tap_w(k) not in res.frozen)
+    psp_active = [p for p in psp_paths if p not in res.frozen]
+    tape_pol = resolve_tape(policy, res,
+                            {k: tap_struct[k] for k in active_taps},
+                            act_struct)
+    # the activation-tape side is policy-uniform (applied inside scan
+    # bodies); it honors the same REPRO_TAPE force the per-tap side does
+    import os
+    act_pol = os.environ.get("REPRO_TAPE", "") or policy.tape_policy
+    srng = None
+    if act_pol == "int8" or any(p == "int8" for p in tape_pol.values()):
+        srng = rng if rng is not None else jax.random.PRNGKey(0)
+    taps0 = {k: jnp.zeros(tap_struct[k].shape, tap_struct[k].dtype)
+             for k in active_taps}
+    psp0 = {p: jnp.broadcast_to(flat_params[p], (B,) + flat_params[p].shape)
+            for p in psp_active}
+    if shard:
+        # pin the per-sample broadcasts batch-sharded so the transpose's psp
+        # cotangents (true per-sample grads, B x param size) never
+        # materialize replicated
+        psp0 = {p: _constrain(v, mesh, _bspec(v.ndim, 0, ba))
+                for p, v in psp0.items()}
+
+    # ---- phase 1: one forward, linearized once; ONE transposed sweep for
+    # the cotangents (with every tap at 'native' this is exactly the
+    # monolithic jax.vjp — bitwise). The activation tape is stored in its
+    # residency representation AT RECORD TIME (tape.act_storage): inside the
+    # models' scan bodies, so the stacked native ys never materialize.
+    # 'recompute' keeps acts native — that IS the standard activation tape
+    # the paper's memory claim is measured against.
+    from repro.core.tape import act_storage
+    act_rng = _path_rng(srng, "acts") if act_pol == "int8" else None
+
+    def run(taps, psp):
+        merged = dict(flat_params)
+        merged.update(psp)
+        tape = Tape(taps)
+        with act_storage(act_pol, act_rng):
+            losses = apply_fn(unflatten(merged), batch, tape)
+        lsum = jnp.sum(losses * mask) if mask is not None else jnp.sum(losses)
+        return lsum, (losses, tape.acts)
+
+    loss_sum, jvp_fn, (losses, stored_acts) = jax.linearize(
+        run, taps0, psp0, has_aux=True)
+    transpose = jax.linear_transpose(lambda dt, dp: jvp_fn(dt, dp),
+                                     taps0, psp0)
+    ds_taps, g_psp = transpose(jnp.ones_like(loss_sum))
+
+    # ---- phase 2: per-unit per-sample norms + clip factors; each cotangent
+    # is consumed by its norm as produced, then held per its tape policy ----
+    unit_of = lambda p: res.unit_of[p]
+    sq = [jnp.zeros((B,), F32) for _ in res.units]
+    held, cache, acts_l = {}, {}, {}
+    for key in active_taps:
+        wpath = _tap_w(key)
+        pol = tape_pol[key]
+        # bf16 records feed the consumers AS STORED: every norm/grad path
+        # (fused kernels and the jnp einsums alike) upcasts per block with
+        # f32 accumulation, so a wholesale dequant would only materialize
+        # f32 copies of the book-kept state it exists to shrink. int8 needs
+        # the (elementwise, consumer-fused) dequant.
+        acts_l[key] = (stored_acts[key] if act_pol == "bf16"
+                       else load_record(stored_acts[key],
+                                        _act_dtype(act_struct[key])))
+        nk, cached = record_sq_norm(key, acts_l[key], ds_taps[key],
+                                    policy.mode, policy.use_kernels,
+                                    res.method_for(wpath), mesh=mesh,
+                                    shard=shard,
+                                    allow_cache=(pol == "native"))
+        cache[key] = cached
+        held[key] = (None if pol == "recompute" else
+                     store_record(ds_taps[key], pol,
+                                  _path_rng(srng, key + "/ds")
+                                  if pol == "int8" else None))
+        u = unit_of(wpath)
+        sq[u] = sq[u] + nk
+    for p in psp_active:
+        g = g_psp[p].astype(F32)
+        u = unit_of(p)
+        sq[u] = sq[u] + jnp.sum(g * g, axis=tuple(range(1, g.ndim)))
+    if shard:
+        # the (B,) accumulators (and the clip factors derived from them)
+        # reduce locally at size B_local and STAY sharded into phase 3
+        sq = [_constrain(s, mesh, P(ba)) for s in sq]
+    unit_norms, unit_C = unit_clip_factors(res, sq)
+    if mask is not None:
+        unit_C = [c * mask for c in unit_C]
+
+    # ---- phase 3: weighted gradients ----------------------------------------
+    def wgrad(key, ds):
+        path, kind, _ = parse_key(key)
+        wpath = path + "/w"
+        w = flat_params[wpath]
+        vocab = w.shape[-2] if kind == "emb" else 0
+        return record_weighted_grad(
+            key, acts_l[key], ds, unit_C[unit_of(wpath)], cache[key],
+            policy.use_kernels, w.dtype, vocab, mesh=mesh, shard=shard)
+
+    flat_grads = {}
+    rec_keys = [k for k in active_taps if held[k] is None]
+    for key in active_taps:
+        if held[key] is not None:
+            ds_in = (held[key] if tape_pol[key] == "bf16"
+                     else load_record(held[key], tap_struct[key].dtype))
+            flat_grads[_tap_w(key)] = wgrad(key, ds_in)
+    if rec_keys:
+        # 'recompute' taps re-derive their weighted gradients with a
+        # REWEIGHTED-LOSS backward (the paper's module 2b'): for clip unit u,
+        # grad_w sum_i C_i^(u) L_i == sum_i C_i^(u) g_i[w] — one standard
+        # backward w.r.t. the chunk's ghost weights only, with the batch
+        # re-run through an UNTAPPED, non-collecting Tape. Nothing from
+        # phase 1 survives for these taps: their cotangents died at the
+        # norms, their activation records are never consumed in phase 3,
+        # and the re-derivation backward remats at the models' own
+        # jax.checkpoint scan-block boundaries. (A per-chunk tap-cotangent
+        # transpose was measured strictly worse: its zero tangents for
+        # every other tap materialize as full-size scan inputs.)
+        token = unit_C[0]
+        for u in range(len(res.units)):
+            rec_u = [k for k in rec_keys if unit_of(_tap_w(k)) == u]
+            if not rec_u:
+                continue
+            nch = max(1, min(int(policy.tape_chunks), len(rec_u)))
+            size = -(-len(rec_u) // nch)
+            C_u = jax.lax.stop_gradient(unit_C[u])
+            for lo in range(0, len(rec_u), size):
+                group = rec_u[lo:lo + size]
+                wpaths = [_tap_w(k) for k in group]
+
+                def reweighted(wsub):
+                    merged = dict(flat_params)
+                    merged.update(psp0)
+                    merged.update(wsub)
+                    losses = apply_fn(unflatten(merged), batch,
+                                      Tape({}, collect=False))
+                    return jnp.sum(losses * C_u)
+
+                # the backward's cotangent seed goes through an optimization
+                # barrier CHAINED on the previous chunk's grads (the clip
+                # factors for the first): phase 2 completes — its cotangents
+                # freed — before any re-derivation runs, and the sweeps run
+                # one at a time so their live sets never overlap
+                seed, _ = jax.lax.optimization_barrier(
+                    (jnp.ones_like(loss_sum), token))
+                _, vjp_w = jax.vjp(reweighted,
+                                   {p: flat_params[p] for p in wpaths})
+                (gw,) = vjp_w(seed)
+                for p in wpaths:
+                    flat_grads[p] = gw[p].astype(flat_params[p].dtype)
+                token = flat_grads[wpaths[-1]]
+    for p in psp_active:
+        g = g_psp[p]
+        flat_grads[p] = jnp.einsum("b...,b->...", g.astype(F32),
+                                   unit_C[unit_of(p)]).astype(
+                                       flat_params[p].dtype)
+    for p in res.frozen:
+        flat_grads[p] = jnp.zeros_like(flat_params[p])
+
+    if mask is not None:   # observability reports REAL samples only
+        losses = losses[:B_real]
+        sq = [s[:B_real] for s in sq]
+        unit_norms = [n[:B_real] for n in unit_norms]
+        unit_C = [c[:B_real] for c in unit_C]
+    return flat_grads, norm_aux(res, losses, sq, unit_norms, unit_C)
+
+
+def monolithic_clipped_sum(apply_fn, params, batch, cfg, mesh=None):
+    """The pre-residency reference: ONE jax.vjp whose tap cotangents all
+    stay live from phase 1 through phase 3. Kept as the parity oracle the
+    streamed engine is tested against (tape_policy='native' must match it
+    bitwise; 'recompute'/'bf16'/'int8' within documented tolerances) — not
+    wired to any production path."""
     policy = as_policy(cfg)
     assert policy.mode in BK_MODES, policy.mode
     B = batch_size_of(batch)
@@ -383,21 +672,16 @@ def bk_clipped_sum(apply_fn, params, batch, cfg, mesh=None):
     _, psp_paths = split_param_paths(params, tap_struct)
     res = resolve_policy(policy, flat_params)
 
-    active_taps = sorted(k for k in tap_struct
-                         if parse_key(k)[0] + "/w" not in res.frozen)
+    active_taps = sorted(k for k in tap_struct if _tap_w(k) not in res.frozen)
     psp_active = [p for p in psp_paths if p not in res.frozen]
     taps0 = {k: jnp.zeros(tap_struct[k].shape, tap_struct[k].dtype)
              for k in active_taps}
     psp0 = {p: jnp.broadcast_to(flat_params[p], (B,) + flat_params[p].shape)
             for p in psp_active}
     if shard:
-        # pin the per-sample broadcasts batch-sharded so the vjp's psp
-        # cotangents (true per-sample grads, B x param size) never
-        # materialize replicated
         psp0 = {p: _constrain(v, mesh, _bspec(v.ndim, 0, ba))
                 for p, v in psp0.items()}
 
-    # ---- phase 1: one forward + one output-gradient-only backward ----------
     def run(taps, psp):
         merged = dict(flat_params)
         merged.update(psp)
@@ -408,12 +692,11 @@ def bk_clipped_sum(apply_fn, params, batch, cfg, mesh=None):
     loss_sum, vjp_fn, (losses, acts) = jax.vjp(run, taps0, psp0, has_aux=True)
     ds_taps, g_psp = vjp_fn(jnp.ones_like(loss_sum))
 
-    # ---- phase 2: per-unit per-sample norms + clip factors ------------------
     unit_of = lambda p: res.unit_of[p]
     sq = [jnp.zeros((B,), F32) for _ in res.units]
     cache = {}
     for key in active_taps:
-        wpath = parse_key(key)[0] + "/w"
+        wpath = _tap_w(key)
         nk, cached = record_sq_norm(key, acts[key], ds_taps[key], policy.mode,
                                     policy.use_kernels,
                                     res.method_for(wpath), mesh=mesh,
@@ -426,12 +709,9 @@ def bk_clipped_sum(apply_fn, params, batch, cfg, mesh=None):
         u = unit_of(p)
         sq[u] = sq[u] + jnp.sum(g * g, axis=tuple(range(1, g.ndim)))
     if shard:
-        # the (B,) accumulators (and the clip factors derived from them)
-        # reduce locally at size B_local and STAY sharded into phase 3
         sq = [_constrain(s, mesh, P(ba)) for s in sq]
     unit_norms, unit_C = unit_clip_factors(res, sq)
 
-    # ---- phase 3: weighted gradients ----------------------------------------
     flat_grads = {}
     for key in active_taps:
         path, kind, _ = parse_key(key)
@@ -462,7 +742,7 @@ def bk_private_grad(apply_fn, params, batch, rng, cfg, step=None, mesh=None,
     policy = as_policy(cfg)
     B = batch_size_of(batch)
     flat_sums, aux = bk_clipped_sum(apply_fn, params, batch, policy,
-                                    mesh=mesh)
+                                    mesh=mesh, rng=rng)
     # ---- phase 4: noise (sigma * sigma_scale_u * composed S per unit) + scale
     res = resolve_policy(policy, flatten(params))
     flat_grads = finalize_noise(policy, res, flat_sums, rng, float(B), step,

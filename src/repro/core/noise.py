@@ -41,13 +41,15 @@ privacy, no single-host noise-generation bottleneck. (Used by the launcher
 when ``dp.distributed_noise`` is on.)
 
 Shard-local generation: ``sharded_normal`` draws each param's noise under a
-mesh so every device generates ONLY its NamedSharding slice, keyed by
-``fold_in(rng, linear shard index)`` — no replicated full-parameter noise
-tensor ever exists in HBM (the dominant phase-4 allocation for large
-models). Both mechanisms accept ``mesh``/``pspecs`` and route every draw
-through it; same (seed, mesh) is bit-deterministic, different shardings of
-the same params are statistically identical but not bitwise (the parity
-tests compare sigma=0 runs for exactness and noise moments separately).
+mesh so every device generates ONLY its NamedSharding slice — no replicated
+full-parameter noise tensor ever exists in HBM (the dominant phase-4
+allocation for large models). Generation is COUNTER-BASED
+(``counter_normal``): the value at a tensor's global coordinate is a pure
+function of (key, global linear index) via threefry-2x32 + the inverse
+normal CDF, so the same (seed, shape) produces BITWISE-identical noise on
+1 device, 8 devices, or any mesh shape — sigma>0 runs are mesh-portable,
+not just statistically matched (previously draws were keyed per
+(shard index, mesh) and only sigma=0 runs were portable).
 """
 from __future__ import annotations
 
@@ -73,39 +75,106 @@ def _spec_axis_names(entry):
     return (entry,)
 
 
+def _raw_key(rng):
+    """PRNGKey -> raw uint32[2] key data (typed new-style keys included)."""
+    if jnp.issubdtype(rng.dtype, jax.dtypes.prng_key):
+        return jax.random.key_data(rng)
+    return rng
+
+
+def counter_normal(rng, shape, dtype=jnp.float32, offsets=None,
+                   full_shape=None):
+    """Counter-based N(0,1): the value at global coordinate x is a pure
+    function of (key, linear index of x within ``full_shape``) — one
+    threefry-2x32 block per element with the index as the counter (the raw
+    block primitive: the high-level hashes pair positions across the array,
+    making values length-dependent), 24 mantissa bits to a (0,1) uniform,
+    then the inverse normal CDF. A device holding only the local block
+    passes its per-dim global ``offsets``; any partition of the same
+    (key, full_shape) reproduces bitwise the same global tensor.
+
+    Tensors past 2^32 elements split the counter across BOTH threefry
+    words: the trailing dims that fit a uint32 ride word 0 (so tensors
+    under 2^32 keep their exact pre-split draws), the leading-block index
+    rides word 1."""
+    from jax.extend.random import threefry2x32_p
+    from jax.scipy.special import ndtri
+    full = tuple(full_shape) if full_shape is not None else tuple(shape)
+    # split point: dims [k:] index counter word 0 exactly; dims [:k] word 1
+    k, trail = len(full), 1
+    while k > 0 and trail * int(full[k - 1]) < (1 << 32):
+        k -= 1
+        trail *= int(full[k])
+    lead = 1
+    for s in full[:k]:
+        lead *= int(s)
+    if lead >= 1 << 32:
+        raise ValueError(
+            f"counter_normal supports < 2^64 elements per tensor (and no "
+            f"single dim >= 2^32), got shape {full}")
+
+    def plane(dims) -> jnp.ndarray:
+        idx = jnp.zeros(shape, jnp.uint32)
+        stride = 1
+        for d in reversed(dims):
+            coord = jax.lax.broadcasted_iota(jnp.uint32, shape, d)
+            if offsets is not None:
+                coord = coord + jnp.uint32(offsets[d])
+            idx = idx + coord * jnp.uint32(stride)
+            stride *= int(full[d])
+        return idx.reshape(-1)
+
+    key = _raw_key(rng)
+    lo, hi = plane(range(k, len(full))), plane(range(k))
+    bits, _ = threefry2x32_p.bind(jnp.broadcast_to(key[0], lo.shape),
+                                  jnp.broadcast_to(key[1], lo.shape),
+                                  lo, hi)
+    bits = bits.reshape(shape)
+    u = (bits >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2 ** -24) \
+        + jnp.float32(2 ** -25)
+    return ndtri(u).astype(dtype)
+
+
 def sharded_normal(rng, shape, dtype=jnp.float32, mesh=None, spec=None):
-    """N(0,1) draw where each device generates only its shard.
+    """N(0,1) draw where each device generates only its shard, bitwise
+    IDENTICAL across device counts and mesh shapes.
 
     ``spec`` is the leaf's PartitionSpec on ``mesh``. The draw runs inside a
-    shard_map: every shard folds its linear shard index (over the spec's
-    mesh axes) into ``rng`` and draws its local block, so the per-device
-    noise buffer is slice-sized and the full tensor exists only as the
-    logical (sharded) output. Mesh axes the spec does not mention see
-    identical keys, so the output is genuinely replicated across them.
-    Falls back to a plain (replicated) draw when there is no mesh, the spec
-    is trivial, or a sharded dim does not divide."""
+    shard_map: every shard computes its global per-dim offsets from its axis
+    indices and generates its local block with :func:`counter_normal`, so
+    the per-device noise buffer is slice-sized while the assembled logical
+    tensor equals the unsharded draw exactly (ROADMAP PR-4 follow-up: noise
+    is now indexed by global coordinates, not by (shard, mesh)). Mesh axes
+    the spec does not mention produce identical blocks, so the output is
+    genuinely replicated across them. Falls back to the unsharded
+    counter-based draw (same values, GSPMD-partitioned) when there is no
+    mesh, the spec is trivial, or a sharded dim does not divide."""
     if mesh is None or spec is None:
-        return jax.random.normal(rng, shape, dtype)
+        return counter_normal(rng, shape, dtype)
     tail = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
     names = [n for e in tail for n in _spec_axis_names(e)]
     if not names or all(mesh.shape[n] == 1 for n in names):
-        return jax.random.normal(rng, shape, dtype)
+        return counter_normal(rng, shape, dtype)
     local_shape = []
     for dim, entry in zip(shape, tail):
         n = 1
         for a in _spec_axis_names(entry):
             n *= mesh.shape[a]
         if dim % n:
-            return jax.random.normal(rng, shape, dtype)  # non-divisible
+            return counter_normal(rng, shape, dtype)  # non-divisible
         local_shape.append(dim // n)
     local_shape = tuple(local_shape)
 
     def draw(key):
-        idx = jnp.int32(0)
-        for a in names:
-            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
-        return jax.random.normal(jax.random.fold_in(key, idx), local_shape,
-                                 dtype)
+        offs = []
+        for dim, loc, entry in zip(shape, local_shape, tail):
+            idx = jnp.uint32(0)
+            for a in _spec_axis_names(entry):
+                idx = idx * jnp.uint32(mesh.shape[a]) \
+                    + jnp.uint32(jax.lax.axis_index(a))
+            offs.append(idx * jnp.uint32(loc))
+        return counter_normal(key, local_shape, dtype, offsets=offs,
+                              full_shape=shape)
 
     from jax.experimental.shard_map import shard_map
     return shard_map(draw, mesh=mesh, in_specs=P(),

@@ -46,9 +46,11 @@ import jax.numpy as jnp
 
 from repro.core.accounting import compose_sensitivity
 from repro.core.clipping import get_clip_fn
+from repro.core.tape import TAPE_POLICIES
 
 SCOPES = ("flat", "group")
 METHODS = ("", "ghost", "direct")
+TAPES = ("",) + TAPE_POLICIES
 
 
 @dataclass(frozen=True)
@@ -63,6 +65,9 @@ class ParamGroup:
     trainable: bool = True           # False = frozen (no taps / grads / noise)
     method: str = ""                 # '' | 'ghost' | 'direct' dispatch override
     sigma_scale: float = 1.0         # noise std multiplier vs the flat scheme
+    tape: str = ""                   # tape residency override for this
+                                     # group's taps ('' = policy default;
+                                     # core.tape.TAPE_POLICIES)
 
     def __post_init__(self):
         if self.scope not in SCOPES:
@@ -71,6 +76,9 @@ class ParamGroup:
         if self.method not in METHODS:
             raise ValueError(f"group {self.name!r}: method must be one of "
                              f"{METHODS}, got {self.method!r}")
+        if self.tape not in TAPES:
+            raise ValueError(f"group {self.name!r}: tape must be one of "
+                             f"{TAPES}, got {self.tape!r}")
         if self.sigma_scale <= 0.0:
             raise ValueError(f"group {self.name!r}: sigma_scale must be > 0 "
                              f"(got {self.sigma_scale}); use trainable=False "
@@ -104,10 +112,23 @@ class PrivacyPolicy:
                                      # restart_every so both reset together)
     noise_completion: bool = False   # honest-restart (Honaker) completion
     use_kernels: bool = True         # fused Pallas kernels via kernels.dispatch
+    tape_policy: str = "native"      # default tape residency for every tap
+                                     # (core.tape.TAPE_POLICIES; 'auto' lets
+                                     # the dispatch planner pick per tap)
+    tape_chunks: int = 1             # phase-3 re-derivation chunk count for
+                                     # 'recompute' taps (each chunk is one
+                                     # backward sweep; its cotangents die
+                                     # before the next chunk's sweep runs)
 
     def __post_init__(self):
         if not self.groups:
             raise ValueError("policy needs at least one ParamGroup")
+        if self.tape_policy not in TAPE_POLICIES:
+            raise ValueError(f"tape_policy must be one of {TAPE_POLICIES}, "
+                             f"got {self.tape_policy!r}")
+        if self.tape_chunks < 1:
+            raise ValueError(f"tape_chunks must be >= 1 "
+                             f"(got {self.tape_chunks})")
         names = [g.name for g in self.groups]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate group names: {names}")
@@ -147,7 +168,8 @@ def as_policy(cfg) -> PrivacyPolicy:
         groups=(ParamGroup("all", ".*", clipping=cfg.clipping, R=cfg.R,
                            scope="flat", gamma=cfg.gamma),),
         mode=cfg.mode, sigma=cfg.sigma,
-        use_kernels=cfg.use_kernels)
+        use_kernels=cfg.use_kernels,
+        tape_policy=cfg.tape_policy, tape_chunks=cfg.tape_chunks)
 
 
 # ------------------------------------------------------------------ resolution

@@ -75,13 +75,18 @@ class Tape:
         return s
 
     def record(self, name: str, kind: str, s: jnp.ndarray, act) -> jnp.ndarray:
-        """Generic tap site: returns s (+tap) and records the activation."""
+        """Generic tap site: returns s (+tap) and records the activation
+        (in the active ``act_storage`` representation — compressing here,
+        inside the scan body, is what keeps the stacked ys compact)."""
         if not self.collect:
             return s
         key = self.key(name, kind)
         if key in self.acts:
             raise ValueError(f"duplicate tap key {key!r}")
         s = self._apply_tap(key, s)
+        store = _ACT_STORE[-1]
+        if store != "native":
+            act = store_record(act, store, _ACT_RNG[-1])
         self.acts[key] = act
         return s
 
@@ -138,6 +143,97 @@ def fix_scan_params(tree: dict, tapped: bool) -> dict:
             leaf = jnp.moveaxis(leaf, 0, 1)
         flat[path] = leaf
     return unflatten(flat)
+
+
+# ------------------------------------------------------------ tape residency
+# Storage policies for book-kept tap records (activations, held cotangents,
+# the mixopt per-sample-grad cache) between BK phases 2 and 3:
+# (activation storage is applied AT RECORD TIME — inside scan bodies, via
+# the ``act_storage`` context — so the stacked native activation ys never
+# materialize; post-hoc compression would briefly hold both copies at the
+# scan boundary and save nothing at the peak)
+#   native     keep the array as produced (bitwise-identical engine output)
+#   bf16       hold a bfloat16 copy; fp32 norm/clip accumulation is preserved
+#   int8       hold an int8 stochastic-rounding quantization (per-tensor
+#              scale, runtime.compression.quantize) — unbiased, loosest parity
+#   recompute  hold NOTHING; the cotangent is re-derived in phase 3 by a
+#              second chunked backward sweep over the phase-1 linearization
+#   auto       per-tap choice by the dispatch residency planner
+#              (kernels.dispatch.tape_plan)
+# Integer / bool leaves (embedding ids, MoE masks) are already compact and
+# always pass through untouched.
+TAPE_POLICIES = ("native", "bf16", "int8", "recompute", "auto")
+
+# trace-time stacks for the activation-tape storage representation: models
+# create sub-Tapes deep inside scan bodies (subtape_run) where the engine's
+# per-tap policy map cannot reach (keys are still scope-relative), so the
+# ACTIVATION side of the residency policy is a uniform trace-scoped setting
+# ('recompute' keeps acts native — they ARE the standard tape). int8 uses
+# the pushed rng; inside a scan body it is a trace constant, so every layer
+# reuses one rounding draw (documented; the held-cotangent side keys
+# per-path).
+_ACT_STORE: list = ["native"]
+_ACT_RNG: list = [None]
+
+
+class act_storage:
+    """Context manager scoping the activation-tape storage representation
+    around a traced ``apply_fn`` call (engine-internal)."""
+
+    def __init__(self, store: str, rng=None):
+        self.store = "native" if store in ("recompute", "auto") else store
+        self.rng = rng
+
+    def __enter__(self):
+        _ACT_STORE.append(self.store)
+        _ACT_RNG.append(self.rng)
+
+    def __exit__(self, *exc):
+        _ACT_STORE.pop()
+        _ACT_RNG.pop()
+
+
+def store_record(x, policy: str, rng=None):
+    """One tap record -> its held representation under a storage policy.
+
+    ``recompute`` never reaches here — dropping the record is the caller's
+    move (there is nothing to store). int8 needs ``rng`` for the stochastic
+    rounding draw."""
+    if policy in ("native", "recompute"):
+        return x
+    if isinstance(x, dict):          # moe record {'a': float, 'mask': ...}
+        out = dict(x)
+        out["a"] = store_record(x["a"], policy, rng)
+        return out
+    if not jnp.issubdtype(x.dtype, jnp.floating):
+        return x                     # ids / masks: already compact
+    if policy == "bf16":
+        return x.astype(jnp.bfloat16)
+    if policy == "int8":
+        from repro.runtime.compression import quantize
+        q, scale = quantize(x, rng)
+        return {"q": q, "scale": scale}
+    raise ValueError(f"unknown tape storage policy {policy!r}; options: "
+                     f"{TAPE_POLICIES[:-1]}")
+
+
+def load_record(stored, dtype=None):
+    """Inverse of :func:`store_record`: -> an array in ``dtype`` (the
+    record's native dtype) ready for the norm / weighted-grad consumers.
+    Loads are elementwise (cast / dequant) so XLA fuses them into the
+    consumer — the full-precision copy never materializes in HBM."""
+    if isinstance(stored, dict):
+        if "q" in stored:            # int8 (q, scale) pair
+            from repro.runtime.compression import dequantize
+            return dequantize(stored["q"], stored["scale"],
+                              dtype or jnp.float32)
+        out = dict(stored)
+        out["a"] = load_record(stored["a"], dtype)
+        return out
+    if dtype is not None and stored.dtype != dtype and \
+            jnp.issubdtype(stored.dtype, jnp.floating):
+        return stored.astype(dtype)
+    return stored
 
 
 def subtape_run(block_fn, params_l, taps_l, *args, collect: bool = True):

@@ -203,6 +203,122 @@ def grad_plan(kind: str, act_shape, ds_shape, vocab: int = 0) -> Plan:
     return _cached(key, mk)
 
 
+# -------------------------------------------------------- residency planner
+# The tape residency planner extends the cost model one more level: after
+# method (ghost/direct) and impl (kernel/jnp), decide how each tap's
+# book-kept state — the held cotangent ds plus the stored activation copy —
+# RESIDES between BK phases 2 and 3: stored native, compressed (bf16/int8),
+# or not at all (recompute: a second chunked backward sweep re-derives ds in
+# phase 3). The analytic rule is bytes-thresholded (compression is ~free,
+# recompute costs a partial backward, so small records stay native, mid-size
+# records compress, and only records big enough to dominate the book-kept
+# footprint pay the re-derivation FLOPs); like the block model it is
+# env-tunable, and benchmarks/step_bench.py measures the real per-policy
+# peak-HBM/step-time cells the way kernel_bench measures block candidates.
+#
+#   REPRO_TAPE=<store>            force one store decision everywhere
+#   REPRO_TAPE_BF16_MIN=<bytes>   compress records held >= this (def. 64 KiB)
+#   REPRO_TAPE_RECOMPUTE_MIN=<b>  re-derive records held >= this (def. 8 MiB)
+
+TAPE_STORES = ("native", "bf16", "int8", "recompute")
+
+TAPE_BF16_MIN = 64 * 2 ** 10
+TAPE_RECOMPUTE_MIN = 8 * 2 ** 20
+
+
+@dataclass(frozen=True)
+class TapePlan:
+    store: str            # one of TAPE_STORES
+    hold_bytes: int       # bytes this tap holds live between phases 2 and 3
+    recompute_flops: int  # modeled phase-3 re-derivation cost (paid only
+                          # when store == 'recompute')
+    itemsize: int = 4     # the cotangent's native dtype width (model dtype)
+
+
+def _prod(shape) -> int:
+    n = 1
+    for s in shape:
+        n *= int(s)
+    return n
+
+
+def _tape_env() -> tuple:
+    return (os.environ.get("REPRO_TAPE", ""),
+            os.environ.get("REPRO_TAPE_BF16_MIN", ""),
+            os.environ.get("REPRO_TAPE_RECOMPUTE_MIN", ""))
+
+
+def _hold_bytes(store: str, ds_elems: int, itemsize: int = 4) -> int:
+    """Held cotangent bytes between phases (the BK-specific residency; the
+    activation copy aliases the standard tape for native/recompute and
+    shrinks alongside ds when compressed). ``itemsize`` is the cotangent's
+    native dtype width — a bf16 model holds 2 bytes/element natively, so
+    the 'bf16' store is a no-op there, never a halving."""
+    return {"native": itemsize * ds_elems,
+            "bf16": min(2, itemsize) * ds_elems,
+            "int8": ds_elems + 4, "recompute": 0}[store]
+
+
+def tape_plan(kind: str, act_shape, ds_shape, policy: str = "auto",
+              method: str = "", itemsize: int = 4) -> TapePlan:
+    """Residency decision for one tap's book-kept state.
+
+    ``policy`` is the resolved request ('auto' lets the byte-threshold rule
+    pick; an explicit store pins it but still reports its cost numbers).
+    ``itemsize`` is the tap cotangent's dtype width (follows the model
+    dtype — the engine threads it from the tap structure so the byte
+    thresholds track the real footprint). ``recompute_flops`` models the
+    phase-3 re-derivation: one backward from the loss down to this tap's
+    site, ~2 * |ds| * d_in FLOPs for the site's own matmul chain."""
+    key = ("tape", kind, tuple(act_shape), tuple(ds_shape), policy, method,
+           int(itemsize), backend()) + _tape_env()
+
+    def mk():
+        ds_elems = _prod(ds_shape)
+        d_in = (act_shape[-1] if kind in ("mm", "moe")
+                else ds_shape[-1])          # emb: cotangent feature dim
+        flops = 2 * ds_elems * int(d_in)
+        force, bf16_min, rec_min = _tape_env()
+        store = force or policy
+        if store == "auto":
+            lo = int(bf16_min) if bf16_min else TAPE_BF16_MIN
+            hi = int(rec_min) if rec_min else TAPE_RECOMPUTE_MIN
+            nat = _hold_bytes("native", ds_elems, itemsize)
+            store = ("recompute" if nat >= hi
+                     else "bf16" if nat >= lo else "native")
+        if store not in TAPE_STORES:
+            raise ValueError(f"unknown tape store {store!r}; options: "
+                             f"{TAPE_STORES} (or 'auto')")
+        return TapePlan(store, _hold_bytes(store, ds_elems, itemsize), flops,
+                        int(itemsize))
+
+    return _cached(key, mk)
+
+
+def fit_tape_budget(plans: dict, budget_bytes: int) -> dict:
+    """Upgrade per-tap stores ({key: TapePlan}) biggest-first along
+    native -> bf16 -> recompute until the total held bytes fit the budget
+    (int8 stays opt-in: its stochastic error is a per-run choice, not a
+    planner default). Returns a new {key: TapePlan} dict."""
+    order = {"native": "bf16", "bf16": "recompute"}
+    out = dict(plans)
+
+    def total() -> int:
+        return sum(p.hold_bytes for p in out.values())
+
+    while total() > budget_bytes:
+        cands = [(k, p) for k, p in out.items() if p.store in order]
+        if not cands:
+            break
+        k, p = max(cands, key=lambda kp: kp[1].hold_bytes)
+        per = {"native": p.itemsize, "bf16": min(2, p.itemsize)}[p.store]
+        ds_elems = p.hold_bytes // per
+        nxt = order[p.store]
+        out[k] = TapePlan(nxt, _hold_bytes(nxt, ds_elems, p.itemsize),
+                          p.recompute_flops, p.itemsize)
+    return out
+
+
 # ---------------------------------------------------------------- autotune
 def _time(fn, *args, reps: int = 3) -> float:
     out = fn(*args)

@@ -69,7 +69,8 @@ def make_train_step(apply_fn, params_like, opt, opt_name: str, dp,
         rng = jax.random.fold_in(state.rng, state.step)
         if policy.mode in BK_MODES and opt.update_leaves is not None:
             sums, aux, B = accumulated_clipped_sum(
-                apply_fn, state.params, batch, policy, microbatch, mesh=mesh)
+                apply_fn, state.params, batch, policy, microbatch, mesh=mesh,
+                rng=rng)
             leaf = noise_leaf_fn(policy, res, rng, float(B), step=state.step,
                                  mesh=mesh, pspecs=flat_pspecs)
             new_p, new_o = opt.update_leaves(

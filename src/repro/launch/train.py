@@ -190,7 +190,16 @@ def train(model_cfg, tc: TrainConfig, dp, log=print,
           dataset_size: int = 0, target_epsilon: float = 0.0,
           delta: float = 1e-5):
     model = build(model_cfg)
+    if tc.tape or tc.tape_chunks:
+        # --tape/--tape-chunks override whatever the DPConfig / preset set
+        # (both config types carry the fields, so replace works on either)
+        dp = dataclasses.replace(
+            dp, **({"tape_policy": tc.tape} if tc.tape else {}),
+            **({"tape_chunks": tc.tape_chunks} if tc.tape_chunks else {}))
     policy = as_policy(dp)
+    if tc.tape or tc.tape_chunks:
+        log(f"tape residency: policy={policy.tape_policy} "
+            f"chunks={policy.tape_chunks}")
     if target_epsilon > 0 and dataset_size > 0 and policy.sigma == 0.0:
         # Tree-aggregation releases (DP-FTRL, or ANY policy configured with
         # noise='tree') get no subsampling amplification — the SGM curve
@@ -407,6 +416,17 @@ def main():
                     default="auto",
                     help="measured kernel-block autotune at startup "
                          "(auto = on for non-CPU backends)")
+    ap.add_argument("--tape", default="",
+                    choices=["", "native", "bf16", "int8", "recompute",
+                             "auto"],
+                    help="tape residency for book-kept tap state between BK "
+                         "phases 2-3: hold native, compressed (bf16/int8), "
+                         "re-derive in phase 3 (recompute), or let the "
+                         "dispatch planner pick per tap (auto); '' keeps "
+                         "the policy preset's choice")
+    ap.add_argument("--tape-chunks", type=int, default=0,
+                    help="phase-3 re-derivation chunk count for recompute "
+                         "taps (0 keeps the policy's)")
     ap.add_argument("--mesh", default="",
                     help="data,model axis sizes for the train mesh "
                          "(e.g. 4,2); default: all devices on 'data'")
@@ -436,6 +456,7 @@ def main():
                      restart_every=args.restart_every,
                      tree_completion=args.tree_completion,
                      policy=args.policy, autotune=args.autotune,
+                     tape=args.tape, tape_chunks=args.tape_chunks,
                      mesh_data=mesh_data, mesh_model=mesh_model,
                      log_every=args.log_every,
                      checkpoint_dir=args.ckpt_dir,

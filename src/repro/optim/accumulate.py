@@ -87,17 +87,20 @@ def _shard_microbatches(mb_batch, mesh, microbatch: int):
 
 
 def accumulated_clipped_sum(apply_fn, params, batch, cfg, microbatch: int,
-                            mesh=None):
+                            mesh=None, rng=None):
     """Phases 1-3 over the logical batch: per-sample clipping inside each
     microbatch, clipped sums accumulated under lax.scan (one microbatch's
     book-keeping live at a time). Returns (flat_sums, aux, B_logical) —
     phase 4 (noise + 1/B) is the caller's, via ``finalize_noise`` or the
-    fused ``policy.noise_leaf_fn`` + ``Optimizer.update_leaves`` path."""
+    fused ``policy.noise_leaf_fn`` + ``Optimizer.update_leaves`` path.
+    ``rng`` keys the tape residency layer's int8 stochastic rounding (only
+    consumed when the policy stores a tap int8)."""
     policy = as_policy(cfg)
     assert policy.mode in BK_MODES, policy.mode
     B = jax.tree_util.tree_leaves(batch)[0].shape[0]
     if microbatch <= 0 or microbatch >= B:
-        sums, aux = bk_clipped_sum(apply_fn, params, batch, policy, mesh=mesh)
+        sums, aux = bk_clipped_sum(apply_fn, params, batch, policy, mesh=mesh,
+                                   rng=rng)
         return sums, aux, B
     assert B % microbatch == 0, (B, microbatch)
     M = B // microbatch
@@ -110,13 +113,20 @@ def accumulated_clipped_sum(apply_fn, params, batch, cfg, microbatch: int,
         jax.tree_util.tree_map(lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
                                mb_batch))
     zeros = {k: jnp.zeros(v.shape, v.dtype) for k, v in sums0.items()}
+    # per-microbatch rounding keys: reusing ONE key would correlate the
+    # int8 stochastic-rounding draws across microbatches, so the
+    # accumulated sum's quantization error would stop averaging out
+    rng0 = rng if rng is not None else jax.random.PRNGKey(0)
 
-    def body(acc, mb):
-        s, aux = bk_clipped_sum(apply_fn, params, mb, policy, mesh=mesh)
+    def body(acc, xs):
+        i, mb = xs
+        s, aux = bk_clipped_sum(apply_fn, params, mb, policy, mesh=mesh,
+                                rng=jax.random.fold_in(rng0, i))
         acc = {k: acc[k] + s[k] for k in acc}
         return acc, (aux["loss"], aux["per_sample_norms"])
 
-    sums, (losses, norms) = jax.lax.scan(body, zeros, mb_batch)
+    sums, (losses, norms) = jax.lax.scan(body, zeros,
+                                         (jnp.arange(M), mb_batch))
     aux = {"loss": jnp.mean(losses),
            "per_sample_norms": norms.reshape(-1)}
     return sums, aux, B
@@ -139,7 +149,7 @@ def accumulated_private_grad(apply_fn, params, batch, rng, cfg,
         return bk_private_grad(apply_fn, params, batch, rng, policy, step,
                                mesh=mesh, pspecs=pspecs)
     sums, aux, _ = accumulated_clipped_sum(apply_fn, params, batch, policy,
-                                           microbatch, mesh=mesh)
+                                           microbatch, mesh=mesh, rng=rng)
     res = resolve_policy(policy, flatten(params))
     flat = finalize_noise(policy, res, sums, rng, float(B), step, mesh=mesh,
                           pspecs=pspecs)

@@ -30,6 +30,11 @@ def quantize(x, rng):
 
 
 def dequantize(q, scale, dtype=jnp.float32):
+    """``scale`` may be a scalar or a leading-axes tensor (e.g. the (L,)
+    per-layer scales a scan stacks for the activation tape)."""
+    scale = jnp.asarray(scale)
+    if scale.ndim:
+        scale = scale.reshape(scale.shape + (1,) * (q.ndim - scale.ndim))
     return (q.astype(jnp.float32) * scale).astype(dtype)
 
 

@@ -1,0 +1,120 @@
+"""runtime.compression edge cases: the scale floor on all-zero tensors,
+unbiasedness of the stochastic rounding (hypothesis), and the quantized
+tree all-reduce over a mixed-dtype pytree (ISSUE 5 satellite)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime.compression import (compressed_allreduce_mean,
+                                       compressed_tree_allreduce_mean,
+                                       dequantize, quantize)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def test_all_zero_tensor_hits_scale_floor():
+    """quantize(0) must not divide by zero: the per-tensor scale floors at
+    1e-12/127 and the round trip is exactly zero, no NaN/inf anywhere."""
+    q, scale = quantize(jnp.zeros((5, 7)), jax.random.PRNGKey(0))
+    assert float(scale) > 0.0
+    np.testing.assert_array_equal(np.asarray(q), 0)
+    out = np.asarray(dequantize(q, scale))
+    np.testing.assert_array_equal(out, 0.0)
+    assert np.isfinite(out).all()
+
+
+def test_roundtrip_error_bounded_by_one_grid_step():
+    x = jax.random.normal(jax.random.PRNGKey(1), (64,)) * 3.0
+    q, scale = quantize(x, jax.random.PRNGKey(2))
+    err = np.abs(np.asarray(dequantize(q, scale)) - np.asarray(x))
+    assert err.max() <= float(scale) * (1 + 1e-6)
+
+
+def test_tiny_magnitudes_stay_finite():
+    """Values far below the floor quantize to zero, not to garbage."""
+    x = jnp.full((8,), 1e-20)
+    q, scale = quantize(x, jax.random.PRNGKey(0))
+    assert np.isfinite(np.asarray(dequantize(q, scale))).all()
+
+
+try:  # hypothesis is optional (guarded like tests/test_ghost_properties)
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _unbiased_body(val: float, seed: int):
+    """E[dequantize(quantize(x))] == x: average the round trip over many
+    independent rounding draws and check the mean against a 4-sigma bound
+    of the rounding variance (each draw's error is within one grid step,
+    so the mean's std is <= scale / (2*sqrt(n)))."""
+    n = 400
+    x = jnp.full((16,), val, jnp.float32)
+    keys = jax.random.split(jax.random.PRNGKey(seed), n)
+
+    def rt(k):
+        q, s = quantize(x, k)
+        return dequantize(q, s)
+
+    outs = np.asarray(jax.vmap(rt)(keys))           # (n, 16)
+    _, scale = quantize(x, keys[0])
+    tol = 4.0 * float(scale) / (2.0 * np.sqrt(n * x.size)) + 1e-7
+    assert abs(outs.mean() - val) <= tol, (outs.mean(), val, tol)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(val=st.floats(-10.0, 10.0, allow_nan=False),
+           seed=st.integers(0, 2**16))
+    def test_stochastic_rounding_unbiased(val, seed):
+        _unbiased_body(val, seed)
+else:
+    @pytest.mark.parametrize("val,seed", [(0.37, 0), (-3.2, 1), (9.99, 2),
+                                          (1e-3, 3), (-0.5, 4)])
+    def test_stochastic_rounding_unbiased(val, seed):
+        _unbiased_body(val, seed)
+
+
+def test_tree_allreduce_mean_mixed_dtype_pytree():
+    """compressed_tree_allreduce_mean over {f32, bf16, nested} leaves via a
+    vmapped axis: each leaf comes back in ITS dtype, equal to the true mean
+    within one int8 grid step per shard."""
+    n = 4
+    rng = jax.random.PRNGKey(3)
+    tree = {
+        "w": jax.random.normal(rng, (n, 6, 5), jnp.float32),
+        "nested": {"b": (jax.random.normal(jax.random.fold_in(rng, 1),
+                                           (n, 7)) * 0.1).astype(jnp.bfloat16)},
+    }
+
+    def body(leaf_tree, r):
+        return compressed_tree_allreduce_mean(leaf_tree, r, "pods")
+
+    out = jax.vmap(body, axis_name="pods",
+                   in_axes=(0, None))(tree, jax.random.PRNGKey(9))
+    assert out["w"].dtype == jnp.float32
+    assert out["nested"]["b"].dtype == jnp.bfloat16
+    for path, leaf, got in (("w", tree["w"], out["w"]),
+                            ("nested/b", tree["nested"]["b"],
+                             out["nested"]["b"])):
+        want = np.asarray(leaf, np.float32).mean(axis=0)
+        scale = np.abs(np.asarray(leaf, np.float32)).max() / 127.0
+        # every pod sees the same reduced mean, within quantization error
+        # (bf16 leaves additionally pay the output cast)
+        tol = scale + (0.01 if got.dtype == jnp.bfloat16 else 1e-6)
+        for shard in range(n):
+            np.testing.assert_allclose(
+                np.asarray(got[shard], np.float32), want, atol=tol,
+                err_msg=f"{path} shard {shard}")
+
+
+def test_allreduce_mean_matches_uncompressed_within_grid():
+    n = 8
+    x = jax.random.normal(jax.random.PRNGKey(4), (n, 32))
+    out = jax.vmap(lambda xi, r: compressed_allreduce_mean(xi, r, "ax"),
+                   axis_name="ax", in_axes=(0, None))(x, jax.random.PRNGKey(5))
+    want = np.asarray(x).mean(axis=0)
+    scale = np.abs(np.asarray(x)).max() / 127.0
+    np.testing.assert_allclose(np.asarray(out[0]), want, atol=scale)

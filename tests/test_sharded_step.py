@@ -145,39 +145,130 @@ def test_shard_local_noise_slice_sized_hlo():
 NOISE_DEVCOUNT = textwrap.dedent("""
     import jax, jax.numpy as jnp
     import numpy as np
-    from repro.core.noise import sharded_normal
+    from repro.core.noise import counter_normal, sharded_normal
 
     rng = jax.random.PRNGKey(5)
     shape = (64, 32)
-    draws = {}
     from jax.sharding import PartitionSpec as P
+    # the counter-based generator is the portable ground truth: every mesh
+    # (and the no-mesh path) must reproduce it BITWISE
+    ref = np.asarray(counter_normal(rng, shape))
+    assert abs(ref.mean()) < 0.1 and abs(ref.std() - 1.0) < 0.1, ref.std()
     for nd in (1, 2, 8):
         mesh = jax.make_mesh((nd, 1), ("data", "model"),
                              devices=jax.devices()[:nd])
         x = np.asarray(sharded_normal(rng, shape, mesh=mesh,
                                       spec=P("data", None)))
-        draws[nd] = x
-        # unit variance at every device count
-        assert abs(x.mean()) < 0.1 and abs(x.std() - 1.0) < 0.1, (nd, x.std())
-        # deterministic per (key, mesh)
-        y = np.asarray(sharded_normal(rng, shape, mesh=mesh,
-                                      spec=P("data", None)))
-        np.testing.assert_array_equal(x, y)
-    # single-shard path degrades to the plain (replicated) draw
-    np.testing.assert_array_equal(
-        draws[1], np.asarray(jax.random.normal(rng, shape)))
-    # non-divisible dims fall back rather than mis-shard
+        # sigma>0 runs are mesh-PORTABLE: same (key, shape) -> same noise
+        # at every device count (not merely statistically matched)
+        np.testing.assert_array_equal(x, ref, err_msg=str(nd))
+    # sharding BOTH dims on a 2-D mesh still assembles the same tensor
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    x = np.asarray(sharded_normal(rng, shape, mesh=mesh,
+                                  spec=P("data", "model")))
+    np.testing.assert_array_equal(x, ref)
+    # non-divisible dims fall back (same values, GSPMD-partitioned)
     z = sharded_normal(rng, (63, 32), mesh=jax.make_mesh(
         (8, 1), ("data", "model")), spec=P("data", None))
     assert z.shape == (63, 32)
+    np.testing.assert_array_equal(np.asarray(z),
+                                  np.asarray(counter_normal(rng, (63, 32))))
     print("OK devcounts")
 """)
 
 
-def test_shard_local_noise_determinism_across_device_counts():
-    """Variance and determinism of the per-shard fold_in keys at 1/2/8
-    shards, plus the graceful fallbacks."""
+def test_shard_local_noise_bitwise_portable_across_device_counts():
+    """Counter-based noise indexed by global coordinates: draws at 1/2/8
+    shards (and 2-D meshes) are bitwise identical, so sigma>0 runs are
+    mesh-portable; non-divisible dims fall back to the same values."""
     _run(NOISE_DEVCOUNT)
+
+
+def test_counter_normal_wide_counter_consistency():
+    """Tensors past 2^32 elements split the counter across both threefry
+    words: blocks of a huge virtual tensor agree across decompositions,
+    distinct leading blocks differ, and a single dim >= 2^32 raises."""
+    import jax
+    import pytest as _pytest
+
+    from repro.core.noise import counter_normal
+
+    rng = jax.random.PRNGKey(5)
+    full = (1 << 20, 1 << 16)          # 2^36 virtual elements
+    a = np.asarray(counter_normal(rng, (2, 4), offsets=(12345, 67),
+                                  full_shape=full))
+    r0 = np.asarray(counter_normal(rng, (1, 4), offsets=(12345, 67),
+                                   full_shape=full))
+    r1 = np.asarray(counter_normal(rng, (1, 4), offsets=(12346, 67),
+                                   full_shape=full))
+    np.testing.assert_array_equal(a[0:1], r0)
+    np.testing.assert_array_equal(a[1:2], r1)
+    assert not np.array_equal(r0, r1)
+    far = np.asarray(counter_normal(rng, (1, 8), offsets=(1 << 19, 0),
+                                    full_shape=full))
+    assert np.isfinite(far).all() and len(np.unique(far)) > 1
+    with _pytest.raises(ValueError, match="2\\^64|2\\^32"):
+        counter_normal(rng, (4,), offsets=(0,), full_shape=(1 << 33,))
+
+
+PADDED = textwrap.dedent("""
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.configs.registry import build, smoke_config
+    from repro.core.bk import DPConfig, bk_private_grad, pad_batch
+    from repro.data.pipeline import Pipeline, PipelineConfig
+    from repro.utils.tree import flatten
+
+    cfg = smoke_config("qwen2-1.5b").with_(dtype="float32",
+                                           param_dtype="float32")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    # B=6 does NOT divide the 4-way data axis: the engine must pad to 8
+    # with masked samples and still take the shard_map'd kernel path
+    pipe = Pipeline(cfg, PipelineConfig(6, 16, seed=0))
+    batch = pipe.batch(0)
+    dp = DPConfig(mode="bk-mixopt", sigma=0.0)
+    mesh8 = jax.make_mesh((4, 2), ("data", "model"))
+    mesh1 = jax.make_mesh((1, 1), ("data", "model"),
+                          devices=jax.devices()[:1])
+
+    padded, mask, Bp = pad_batch(batch, mesh8, 6)
+    assert Bp == 8 and mask.shape == (8,), (Bp, mask.shape)
+    assert float(mask.sum()) == 6.0
+    # the padded shapes divide: the kernel path engages instead of the
+    # GSPMD-einsum fallback
+    from repro.core.bk import batch_shard
+    assert batch_shard(mesh8, Bp) is not None
+    assert batch_shard(mesh8, 6) is None
+
+    def grads(mesh):
+        with mesh:
+            g, aux = jax.jit(
+                lambda p, b: bk_private_grad(model.apply, p, b,
+                                             jax.random.PRNGKey(7), dp,
+                                             mesh=mesh))(params, batch)
+        return jax.device_get(g), aux
+
+    g8, aux8 = grads(mesh8)
+    g1, aux1 = grads(mesh1)
+    # aux reports REAL samples only (pad rows are invisible)
+    assert np.asarray(aux8["per_sample_norms"]).shape == (6,)
+    np.testing.assert_allclose(np.asarray(aux8["per_sample_norms"]),
+                               np.asarray(aux1["per_sample_norms"]),
+                               rtol=1e-4, atol=1e-6)
+    for k, v in flatten(g1).items():
+        np.testing.assert_allclose(np.asarray(flatten(g8)[k]),
+                                   np.asarray(v), rtol=1e-3, atol=1e-5,
+                                   err_msg=k)
+    print("OK padded")
+""")
+
+
+def test_padded_batch_parity_on_mesh():
+    """A non-divisible batch (B=6 on a 4-way data axis) is padded with
+    masked samples, engages the shard_map'd kernel path, and matches the
+    single-device gradients; aux reports real samples only."""
+    _run(PADDED)
 
 
 def test_donated_step_checkpoint_safety(tmp_path):
