@@ -38,27 +38,33 @@ import subprocess
 import sys
 import time
 
-# (mode, tape policy, device count, config profile). 'smoke' is the
-# committed-baseline geometry (2 layers — residency constants dominate, so
-# only bf16 wins there); 'deep' (8 layers, d=64, T=64) is where the
-# book-kept state dominates and the residency manager's asymptotics show.
+# (mode, tape policy, device count, config profile, clipping scope). 'smoke'
+# is the committed-baseline geometry (2 layers — residency constants
+# dominate, so only bf16 wins there); 'deep' (8 layers, d=64, T=64) is where
+# the book-kept state dominates and the residency manager's asymptotics
+# show. scope 'layer' re-scopes the flat DPConfig to per-path clip units
+# (policy.with_scope): every tap streams — one fused norm+clip+grad at the
+# cotangent, nothing book-kept — so its deep-profile temp HBM is the
+# engine's floor (below even 'recompute', without the re-derivation pass).
 CELLS = (
-    ("nonprivate", "native", 1, "smoke"),
-    ("bk-mixopt", "native", 1, "smoke"),
-    ("bk-mixopt", "bf16", 1, "smoke"),
-    ("bk-mixopt", "int8", 1, "smoke"),
-    ("bk-mixopt", "recompute", 1, "smoke"),
-    ("nonprivate", "native", 8, "smoke"),
-    ("bk-mixopt", "native", 8, "smoke"),
-    ("bk-mixopt", "native", 1, "deep"),
-    ("bk-mixopt", "bf16", 1, "deep"),
-    ("bk-mixopt", "recompute", 1, "deep"),
+    ("nonprivate", "native", 1, "smoke", "flat"),
+    ("bk-mixopt", "native", 1, "smoke", "flat"),
+    ("bk-mixopt", "bf16", 1, "smoke", "flat"),
+    ("bk-mixopt", "int8", 1, "smoke", "flat"),
+    ("bk-mixopt", "recompute", 1, "smoke", "flat"),
+    ("bk-mixopt", "native", 1, "smoke", "layer"),
+    ("nonprivate", "native", 8, "smoke", "flat"),
+    ("bk-mixopt", "native", 8, "smoke", "flat"),
+    ("bk-mixopt", "native", 1, "deep", "flat"),
+    ("bk-mixopt", "bf16", 1, "deep", "flat"),
+    ("bk-mixopt", "recompute", 1, "deep", "flat"),
+    ("bk-mixopt", "native", 1, "deep", "layer"),
 )
 OUT = "BENCH_step.json"
 
 
 def run_cell(mode: str, ndev: int, fast: bool, tape: str = "native",
-             profile: str = "smoke") -> dict:
+             profile: str = "smoke", scope: str = "flat") -> dict:
     import jax
     import jax.numpy as jnp
 
@@ -82,6 +88,9 @@ def run_cell(mode: str, ndev: int, fast: bool, tape: str = "native",
     opt = make_optimizer("adamw", lambda s: jnp.asarray(1e-3, jnp.float32))
     dp = DPConfig(mode=mode, sigma=0.0 if mode == "nonprivate" else 0.5,
                   tape_policy=tape, tape_chunks=2)
+    if scope not in ("", "flat") and mode != "nonprivate":
+        from repro.core.policy import with_scope
+        dp = with_scope(dp, scope)
     mesh = make_train_mesh(ndev, 1)
     pipe = Pipeline(cfg, PipelineConfig(B, T, seed=0))
 
@@ -113,7 +122,7 @@ def run_cell(mode: str, ndev: int, fast: bool, tape: str = "native",
 
     return {
         "mode": mode, "devices": ndev, "tape": tape, "profile": profile,
-        "mesh": dict(mesh.shape),
+        "scope": scope, "mesh": dict(mesh.shape),
         "backend": jax.default_backend(),
         "interpret_kernels": jax.default_backend() != "tpu",
         "batch": B, "seq": T, "steps": steps,
@@ -146,7 +155,7 @@ def _load_baseline(backend: str, fast: bool):
     if base.get("backend") != backend or base.get("fast") != fast:
         return None
     return {(c["mode"], c.get("tape", "native"), c["devices"],
-             c.get("profile", "smoke")): c
+             c.get("profile", "smoke"), c.get("scope", "flat")): c
             for c in base.get("cells", [])}
 
 
@@ -162,11 +171,11 @@ def gate(cells: list, baseline: dict) -> list:
     bad = []
     for c in cells:
         key = (c["mode"], c.get("tape", "native"), c["devices"],
-               c.get("profile", "smoke"))
+               c.get("profile", "smoke"), c.get("scope", "flat"))
         b = baseline.get(key)
         if b is None:
             continue
-        name = f"{key[0]}/{key[1]}/{key[3]} x {key[2]}dev"
+        name = f"{key[0]}/{key[1]}/{key[3]}/{key[4]} x {key[2]}dev"
         if c["tokens_per_s"] < b["tokens_per_s"] * (1 - toks_tol):
             bad.append(f"{name}: tokens/s {c['tokens_per_s']:.0f} < "
                        f"baseline {b['tokens_per_s']:.0f} - {toks_tol:.0%}")
@@ -186,13 +195,14 @@ def main(argv) -> int:
         rest = [a for a in argv[i + 3:] if not a.startswith("--")]
         tape = rest[0] if rest else "native"
         profile = rest[1] if len(rest) > 1 else "smoke"
+        scope = rest[2] if len(rest) > 2 else "flat"
         print("CELL_JSON " + json.dumps(run_cell(mode, ndev, fast, tape,
-                                                 profile)))
+                                                 profile, scope)))
         return 0
 
     cells = []
     baseline = None
-    for mode, tape, ndev, profile in CELLS:
+    for mode, tape, ndev, profile, scope in CELLS:
         env = dict(os.environ)
         env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
                             + f" --xla_force_host_platform_device_count={ndev}"
@@ -200,14 +210,14 @@ def main(argv) -> int:
         env["PYTHONPATH"] = "src" + (os.pathsep + env["PYTHONPATH"]
                                      if env.get("PYTHONPATH") else "")
         cmd = [sys.executable, "-m", "benchmarks.step_bench",
-               "--cell", mode, str(ndev), tape, profile] \
+               "--cell", mode, str(ndev), tape, profile, scope] \
             + (["--fast"] if fast else [])
         r = subprocess.run(cmd, capture_output=True, text=True, env=env,
                            timeout=1800)
         line = next((ln for ln in r.stdout.splitlines()
                      if ln.startswith("CELL_JSON ")), None)
         if r.returncode != 0 or line is None:
-            print(f"[ERR ] {mode}/{tape}/{profile} x {ndev}dev:\n"
+            print(f"[ERR ] {mode}/{tape}/{profile}/{scope} x {ndev}dev:\n"
                   f"{r.stdout[-800:]}{r.stderr[-2000:]}")
             return 1
         cell = json.loads(line[len("CELL_JSON "):])
@@ -217,8 +227,8 @@ def main(argv) -> int:
         cells.append(cell)
         hbm = cell["peak_hbm_bytes"]["total"] / 2**20
         temp = cell["peak_hbm_bytes"]["temp"] / 2**20
-        print(f"[ok] {mode:>11}/{tape:<9}/{profile:<5} x {ndev}dev  "
-              f"{cell['tokens_per_s']:>8.0f} tok/s  "
+        print(f"[ok] {mode:>11}/{tape:<9}/{profile:<5}/{scope:<5} x {ndev}dev"
+              f"  {cell['tokens_per_s']:>8.0f} tok/s  "
               f"{cell['steps_per_s']:>6.2f} steps/s  "
               f"hbm/dev {hbm:>6.2f} MiB (temp {temp:.2f})")
 

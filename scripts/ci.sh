@@ -17,12 +17,14 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 BASELINE="${TIER1_BASELINE_FAILURES:-0}"
 # floor excludes tests/test_sharded_step.py (8 tests): it gates in its own
 # dedicated stage below. PR 5 added tests/test_tape_residency.py (32) and
-# tests/test_compression.py (10 without hypothesis): counted suite is 332
-# when hypothesis is absent. The floor sits 4 below that because installing
-# hypothesis REPLACES test_compression's 5 parametrized fallback cases with
-# 1 @given test (net -4 there, while unskipping test_ghost_properties adds
-# tests) — the floor must not fail a fuller environment.
-PASS_FLOOR="${TIER1_BASELINE_PASSED:-328}"
+# tests/test_compression.py (10 without hypothesis): counted suite was 332
+# when hypothesis is absent. PR 6 added tests/test_layer_scope.py (29) and
+# 9 layer-scope cases in test_tape_residency: counted suite is 370. The
+# floor sits 4 below that because installing hypothesis REPLACES
+# test_compression's 5 parametrized fallback cases with 1 @given test
+# (net -4 there, while unskipping test_ghost_properties adds tests) — the
+# floor must not fail a fuller environment.
+PASS_FLOOR="${TIER1_BASELINE_PASSED:-366}"
 LOG="$(mktemp)"
 trap 'rm -f "$LOG"' EXIT
 
@@ -59,6 +61,14 @@ echo "== sharded smoke: donated mesh step on 8 fake devices =="
 python -m pytest tests/test_sharded_step.py -q
 sharded=$?
 
+echo "== layer-scope smoke: streamed one-pass backward through the CLI =="
+# end-to-end through the real train driver: --clipping-scope layer re-scopes
+# the policy to per-path clip units and the BK engine streams every tap
+# (tests cover parity; this guards the CLI wiring + a real jit/compile)
+python -m repro.launch.train --smoke --steps 3 --batch 4 --seq 16 \
+    --clipping-scope layer --log-every 1
+layer=$?
+
 echo "== benchmarks: validation (--fast) =="
 python -m benchmarks.run --fast
 bench=$?
@@ -79,8 +89,8 @@ echo "== benchmarks: step bench (--fast, writes BENCH_step.json, gated) =="
 STEP_GATE_TOKS_TOL="${STEP_GATE_TOKS_TOL:-0.5}" python -m benchmarks.step_bench --fast
 stepb=$?
 
-echo "ci summary: tier1=$tier1 (passed=$passed failed=$failed baseline=$BASELINE) sharded=$sharded bench=$bench kernel_bench=$kern step_bench=$stepb"
-for rc in $tier1 $sharded $bench $kern $stepb; do
+echo "ci summary: tier1=$tier1 (passed=$passed failed=$failed baseline=$BASELINE) sharded=$sharded layer_smoke=$layer bench=$bench kernel_bench=$kern step_bench=$stepb"
+for rc in $tier1 $sharded $layer $bench $kern $stepb; do
     [ "$rc" -ne 0 ] && exit "$rc"
 done
 exit 0

@@ -106,6 +106,11 @@ class TrainConfig:
     # the DPConfig / policy preset configured; tape_chunks 0 likewise
     tape: str = ""
     tape_chunks: int = 0
+    # clipping-scope override (core.policy.SCOPES): re-scope every trainable
+    # group of the DPConfig/preset via policy.with_scope — "layer" makes
+    # each param path its own clip unit and streams the BK backward
+    # (one pass, nothing book-kept); "" keeps the preset's scopes
+    clipping_scope: str = ""
 
 
 @dataclass(frozen=True)

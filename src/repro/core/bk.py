@@ -351,9 +351,9 @@ def plan_report(apply_fn, params, batch, cfg) -> dict:
     taps, acts = tap_act_structs(apply_fn, params, batch)
     flat_params = flatten(params)
     res = resolve_policy(policy, flat_params)
-    tape_pol = resolve_tape(policy, res,
-                            {k: taps[k] for k in taps
-                             if _tap_w(k) not in res.frozen}, acts)
+    active = sorted(k for k in taps if _tap_w(k) not in res.frozen)
+    tape_pol = resolve_tape(policy, res, {k: taps[k] for k in active}, acts)
+    stream_keys = _streamed_taps(res, active)
     report = {}
     for key in sorted(acts):
         path, kind, _ = parse_key(key)
@@ -367,11 +367,19 @@ def plan_report(apply_fn, params, batch, cfg) -> dict:
                                        policy.mode, res.method_for(wpath)),
             "grad": dispatch.grad_plan(kind, a_shape, taps[key].shape, vocab),
         }
+        if key in stream_keys:
+            # streamed single-tap unit: phases 2+3 fuse at this tap — the
+            # 'fused' plan says HOW (one kernel launch vs composed split)
+            # and the 'stream' tape entry records that nothing is held
+            plans["fused"] = dispatch.fused_plan(kind, a_shape,
+                                                 taps[key].shape, policy.mode,
+                                                 res.method_for(wpath))
         if not policy.use_kernels:  # report what will actually run
             plans = {k: replace(p, impl="jnp") for k, p in plans.items()}
-        plans["tape"] = dispatch.tape_plan(kind, a_shape, taps[key].shape,
-                                           tape_pol[key],
-                                           itemsize=taps[key].dtype.itemsize)
+        plans["tape"] = dispatch.tape_plan(
+            kind, a_shape, taps[key].shape,
+            "stream" if key in stream_keys else tape_pol[key],
+            itemsize=taps[key].dtype.itemsize)
         report[key] = plans
     return report
 
@@ -439,6 +447,31 @@ def _act_dtype(struct):
     return struct["a"].dtype if isinstance(struct, dict) else struct.dtype
 
 
+def _streamed_taps(res, active_taps) -> frozenset:
+    """Taps whose clip unit STREAMS: the unit's norm closes over exactly this
+    one tap's cotangent (single-path layer-scope units), so phases 2+3 fuse
+    at the tap — norm, clip factor and weighted grad are emitted the moment
+    the cotangent is produced, and nothing is book-kept between phases.
+
+    Restricted to scope='layer' groups by design: a flat/group-scope unit
+    that happens to own a single tap keeps the two-phase flow so existing
+    scopes stay bitwise-identical (streaming ignores the tap's residency
+    override — there is nothing to hold — which would silently change what
+    a bf16/int8 ``tape`` request computes). ``REPRO_STREAM=0`` is the kill
+    switch (forces two-phase everywhere; parity tests diff against it)."""
+    import os
+    if os.environ.get("REPRO_STREAM", "1") == "0":
+        return frozenset()
+    out = set()
+    for key in active_taps:
+        wpath = _tap_w(key)
+        u = res.unit_of[wpath]
+        if res.group_of[wpath].scope == "layer" \
+                and res.units[u].paths == (wpath,):
+            out.add(key)
+    return frozenset(out)
+
+
 # ------------------------------------------------------------------- BK core
 def bk_clipped_sum(apply_fn, params, batch, cfg, mesh=None, rng=None):
     """Phases 1-3 of BK: the pre-noise clipped gradient SUM (flat dict),
@@ -495,12 +528,25 @@ def bk_clipped_sum(apply_fn, params, batch, cfg, mesh=None, rng=None):
     tape_pol = resolve_tape(policy, res,
                             {k: tap_struct[k] for k in active_taps},
                             act_struct)
-    # the activation-tape side is policy-uniform (applied inside scan
-    # bodies); it honors the same REPRO_TAPE force the per-tap side does
+    stream_keys = _streamed_taps(res, active_taps)
+    # the activation-tape side resolves PER TAP (REPRO_TAPE force > group
+    # ``tape`` override > policy default): records happen inside scan bodies
+    # where keys are scope-relative, so the resolver receives the MERGED key
+    # (tape._SCOPE_PREFIX) and maps it to its owning group's store
     import os
-    act_pol = os.environ.get("REPRO_TAPE", "") or policy.tape_policy
+    _force_tape = os.environ.get("REPRO_TAPE", "")
+
+    def _act_store_for(full_key: str) -> str:
+        g = res.group_of.get(_tap_w(full_key))
+        pol = _force_tape or (g.tape if g is not None else "") \
+            or policy.tape_policy
+        # recompute/auto keep acts native — they ARE the standard tape
+        return "native" if pol in ("recompute", "auto") else pol
+
+    act_stores = {k: _act_store_for(k) for k in active_taps}
     srng = None
-    if act_pol == "int8" or any(p == "int8" for p in tape_pol.values()):
+    if any(v == "int8" for v in act_stores.values()) \
+            or any(p == "int8" for p in tape_pol.values()):
         srng = rng if rng is not None else jax.random.PRNGKey(0)
     taps0 = {k: jnp.zeros(tap_struct[k].shape, tap_struct[k].dtype)
              for k in active_taps}
@@ -521,13 +567,14 @@ def bk_clipped_sum(apply_fn, params, batch, cfg, mesh=None, rng=None):
     # 'recompute' keeps acts native — that IS the standard activation tape
     # the paper's memory claim is measured against.
     from repro.core.tape import act_storage
-    act_rng = _path_rng(srng, "acts") if act_pol == "int8" else None
+    act_rng = (_path_rng(srng, "acts")
+               if any(v == "int8" for v in act_stores.values()) else None)
 
     def run(taps, psp):
         merged = dict(flat_params)
         merged.update(psp)
         tape = Tape(taps)
-        with act_storage(act_pol, act_rng):
+        with act_storage(_act_store_for, act_rng):
             losses = apply_fn(unflatten(merged), batch, tape)
         lsum = jnp.sum(losses * mask) if mask is not None else jnp.sum(losses)
         return lsum, (losses, tape.acts)
@@ -539,10 +586,17 @@ def bk_clipped_sum(apply_fn, params, batch, cfg, mesh=None, rng=None):
     ds_taps, g_psp = transpose(jnp.ones_like(loss_sum))
 
     # ---- phase 2: per-unit per-sample norms + clip factors; each cotangent
-    # is consumed by its norm as produced, then held per its tape policy ----
+    # is consumed by its norm as produced, then held per its tape policy.
+    # STREAMED taps (single-tap layer-scope units) never hold anything:
+    # their unit's clip decision closes over this one cotangent, so the
+    # norm, the clip factor AND the phase-3 weighted grad all fire here —
+    # one fused kernel launch where the dispatch cost model says the
+    # per-sample grad fits VMEM, the composed norm+grad paths otherwise —
+    # and the record is dead the moment the grad is emitted. ----
+    from repro.kernels import dispatch
     unit_of = lambda p: res.unit_of[p]
     sq = [jnp.zeros((B,), F32) for _ in res.units]
-    held, cache, acts_l = {}, {}, {}
+    held, cache, acts_l, flat_grads = {}, {}, {}, {}
     for key in active_taps:
         wpath = _tap_w(key)
         pol = tape_pol[key]
@@ -551,9 +605,68 @@ def bk_clipped_sum(apply_fn, params, batch, cfg, mesh=None, rng=None):
         # f32 accumulation, so a wholesale dequant would only materialize
         # f32 copies of the book-kept state it exists to shrink. int8 needs
         # the (elementwise, consumer-fused) dequant.
-        acts_l[key] = (stored_acts[key] if act_pol == "bf16"
-                       else load_record(stored_acts[key],
-                                        _act_dtype(act_struct[key])))
+        act = (stored_acts[key] if act_stores[key] == "bf16"
+               else load_record(stored_acts[key],
+                                _act_dtype(act_struct[key])))
+        if key in stream_keys:
+            u = unit_of(wpath)
+            unit = res.units[u]
+            ds, w = ds_taps[key], flat_params[wpath]
+            _, kind, _ = parse_key(key)
+            wv = mask if mask is not None else jnp.ones((B,), F32)
+            n_ = shard[1] if shard else 1
+            fplan = None
+            if policy.use_kernels and kind == "mm" \
+                    and not isinstance(act, dict):
+                bdim = act.ndim - 3
+                fplan = dispatch.fused_plan(
+                    "mm", _local(act.shape, bdim, n_),
+                    _local(ds.shape, bdim, n_), policy.mode,
+                    res.method_for(wpath))
+            if fplan is not None and fplan.method == "fused" \
+                    and fplan.impl == "kernel":
+                from repro.kernels import ops as kops
+                fused = lambda a, d, v: kops.fused_clip_grad_mm(
+                    a, d, v, unit.clipping, unit.R, unit.gamma)
+                if shard:
+                    # NOT _shard_call: only the grad psums across the batch
+                    # axes — the per-sample sq norms stay batch-sharded
+                    from jax.experimental.shard_map import shard_map
+                    bdim = act.ndim - 3
+                    body = lambda a, d, v: (
+                        (lambda g_s: (jax.lax.psum(g_s[0], ba), g_s[1]))
+                        (fused(a, d, v)))
+                    G, sqk = shard_map(
+                        body, mesh=mesh,
+                        in_specs=(_bspec(act.ndim, bdim, ba),
+                                  _bspec(ds.ndim, bdim, ba), P(ba)),
+                        out_specs=(P(), P(ba)),
+                        check_rep=False)(act, ds, wv)
+                else:
+                    G, sqk = fused(act, ds, wv)
+                flat_grads[wpath] = G.astype(w.dtype)
+                sq[u] = sq[u] + sqk
+            else:
+                # composed streaming: op-identical to the two-phase flow for
+                # this unit (norm -> constrain -> sqrt -> clip -> mask ->
+                # weighted grad), just with nothing held in between
+                nk, cached = record_sq_norm(key, act, ds, policy.mode,
+                                            policy.use_kernels,
+                                            res.method_for(wpath), mesh=mesh,
+                                            shard=shard, allow_cache=True)
+                s = sq[u] + nk
+                if shard:
+                    s = _constrain(s, mesh, P(ba))
+                sq[u] = s
+                C_u = unit.clip_fn()(jnp.sqrt(s)).astype(F32)
+                if mask is not None:
+                    C_u = C_u * mask
+                vocab = w.shape[-2] if kind == "emb" else 0
+                flat_grads[wpath] = record_weighted_grad(
+                    key, act, ds, C_u, cached, policy.use_kernels, w.dtype,
+                    vocab, mesh=mesh, shard=shard)
+            continue
+        acts_l[key] = act
         nk, cached = record_sq_norm(key, acts_l[key], ds_taps[key],
                                     policy.mode, policy.use_kernels,
                                     res.method_for(wpath), mesh=mesh,
@@ -588,10 +701,12 @@ def bk_clipped_sum(apply_fn, params, batch, cfg, mesh=None, rng=None):
             key, acts_l[key], ds, unit_C[unit_of(wpath)], cache[key],
             policy.use_kernels, w.dtype, vocab, mesh=mesh, shard=shard)
 
-    flat_grads = {}
-    rec_keys = [k for k in active_taps if held[k] is None]
+    # streamed keys are absent from ``held``/``cache``: their grads landed
+    # in flat_grads during phase 2 and nothing of theirs survives to here
+    rec_keys = [k for k in active_taps
+                if k not in stream_keys and held[k] is None]
     for key in active_taps:
-        if held[key] is not None:
+        if held.get(key) is not None:
             ds_in = (held[key] if tape_pol[key] == "bf16"
                      else load_record(held[key], tap_struct[key].dtype))
             flat_grads[_tap_w(key)] = wgrad(key, ds_in)

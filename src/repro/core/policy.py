@@ -12,6 +12,16 @@ fn + threshold R, a norm *scope*, an optional ghost-vs-direct override for
   scope='group'  the group is its own clipping unit: its own per-sample norm
                  ||g_i^(g)||, its own C_i^(g) = clip(||g_i^(g)||; R_g)
                  (group-wise clipping, He et al. 2022 / Bu et al. 2023).
+  scope='layer'  EVERY trainable param path the group matches becomes its
+                 own clipping unit (per-layer clipping, the finest grain of
+                 He et al. 2022). Each unit's norm closes over a single
+                 tap's cotangent, so the BK engine can STREAM it: the norm,
+                 the clip factor and the weighted grad are all emitted the
+                 moment that tap's cotangent is produced, and nothing is
+                 book-kept between phases 2 and 3 (core.bk streamed fast
+                 path). Note that under a scanned trunk a path is the
+                 STACKED op (e.g. ``blocks/attn/qkv/w`` over all scan
+                 layers) — one unit per op type, pooled over scan depth.
   sigma_scale    heterogeneous per-group noise: the noise std on this
                  group's coordinates is sigma * sigma_scale * S where S is
                  the composed sensitivity below. The default 1.0 reproduces
@@ -29,7 +39,8 @@ fn + threshold R, a norm *scope*, an optional ghost-vs-direct override for
                  grad, no noise; grads come back as zeros.
 
 The L2 sensitivity of one sample's clipped contribution composes as
-sqrt(R_flat^2 + sum_g R_g^2) over the non-empty trainable units
+sqrt(R_flat^2 + sum_g R_g^2 + sum_l R_l^2) over the non-empty trainable
+units — layer-scope groups contribute one R_l term PER MEMBER PATH
 (``accounting.compose_sensitivity``); the noise mechanism scales each
 group's leaves by sigma_scale_g times that.
 
@@ -48,7 +59,7 @@ from repro.core.accounting import compose_sensitivity
 from repro.core.clipping import get_clip_fn
 from repro.core.tape import TAPE_POLICIES
 
-SCOPES = ("flat", "group")
+SCOPES = ("flat", "group", "layer")
 METHODS = ("", "ghost", "direct")
 TAPES = ("",) + TAPE_POLICIES
 
@@ -60,7 +71,7 @@ class ParamGroup:
     match: str                       # path prefix, or regex (fullmatch)
     clipping: str = "automatic"      # clipping fn name (core.clipping)
     R: float = 1.0                   # per-group clipping threshold R_g
-    scope: str = "flat"              # 'flat' | 'group' (norm scope)
+    scope: str = "flat"              # 'flat' | 'group' | 'layer' (norm scope)
     gamma: float = 0.01              # automatic-clipping stability constant
     trainable: bool = True           # False = frozen (no taps / grads / noise)
     method: str = ""                 # '' | 'ghost' | 'direct' dispatch override
@@ -172,6 +183,25 @@ def as_policy(cfg) -> PrivacyPolicy:
         tape_policy=cfg.tape_policy, tape_chunks=cfg.tape_chunks)
 
 
+def with_scope(cfg, scope: str) -> PrivacyPolicy:
+    """Re-scope a DPConfig / PrivacyPolicy: every TRAINABLE group's norm
+    scope becomes ``scope`` (frozen groups are untouched — they have no
+    norm). The ``--clipping-scope`` CLI knob and the per-scope benchmark
+    cells route here. Each group keeps its own clipping/R/gamma/sigma_scale;
+    note that re-scoping a heterogeneous preset to 'flat' raises at
+    resolve time (flat groups must share one norm pool's parameters)."""
+    import dataclasses
+    policy = as_policy(cfg)
+    if not scope:
+        return policy
+    if scope not in SCOPES:
+        raise ValueError(f"clipping scope must be one of {SCOPES}, "
+                         f"got {scope!r}")
+    groups = tuple(dataclasses.replace(g, scope=scope) if g.trainable else g
+                   for g in policy.groups)
+    return dataclasses.replace(policy, groups=groups)
+
+
 # ------------------------------------------------------------------ resolution
 @dataclass(frozen=True)
 class ClipUnit:
@@ -268,10 +298,20 @@ def resolve_policy(policy: PrivacyPolicy, param_paths) -> ResolvedPolicy:
         for p in paths:
             unit_of[p] = 0
     for g in policy.groups:
-        if g.trainable and g.scope == "group" and members[g.name]:
+        if not (g.trainable and members[g.name]):
+            continue
+        if g.scope == "group":
             units.append(ClipUnit(g.name, g.clipping, g.R, g.gamma,
                                   tuple(members[g.name]), g.sigma_scale))
             for p in members[g.name]:
+                unit_of[p] = len(units) - 1
+        elif g.scope == "layer":
+            # per-layer clipping: one single-path unit per member param —
+            # the unit name carries the path so group_norms / noise
+            # multipliers stay addressable per layer
+            for p in members[g.name]:
+                units.append(ClipUnit(f"{g.name}:{p}", g.clipping, g.R,
+                                      g.gamma, (p,), g.sigma_scale))
                 unit_of[p] = len(units) - 1
 
     frozen = frozenset(p for p in param_paths if not group_of[p].trainable)

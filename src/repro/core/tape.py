@@ -41,6 +41,8 @@ class Tape:
         self.acts: dict = {}
         self.tap_zeros: dict = {}
         self._prefix: list = []
+        self._scan_sub = False       # set by subtape_run: keys are relative
+                                     # to the enclosing scan scope
 
     @classmethod
     def null(cls) -> "Tape":
@@ -85,6 +87,14 @@ class Tape:
             raise ValueError(f"duplicate tap key {key!r}")
         s = self._apply_tap(key, s)
         store = _ACT_STORE[-1]
+        if not isinstance(store, str):
+            # per-tap resolver (scope-relative per-group overrides): sub-
+            # Tapes inside scan bodies see only relative keys, so rebuild
+            # the merged key from the enclosing scan-scope prefix
+            full = key
+            if self._scan_sub and _SCOPE_PREFIX:
+                full = _SCOPE_PREFIX[-1] + key + ".s"
+            store = store(full)
         if store != "native":
             act = store_record(act, store, _ACT_RNG[-1])
         self.acts[key] = act
@@ -92,10 +102,16 @@ class Tape:
 
     # --------------------------------------------------------- merging (scan)
     def subtaps(self, name: str) -> Optional[dict]:
-        """Taps subtree for a scan scope, keys relativized. None if untapped."""
+        """Taps subtree for a scan scope, keys relativized. None if untapped.
+
+        Also pushes the scope's absolute prefix onto the trace-scoped stack
+        (popped by the paired :meth:`merge_stacked`) so sub-Tape records —
+        which see only relative keys — can resolve their MERGED key for the
+        per-tap activation-storage resolver."""
+        prefix = "/".join(self._prefix + [name]) + "/"
+        _SCOPE_PREFIX.append(prefix)
         if self.taps is None:
             return None
-        prefix = "/".join(self._prefix + [name]) + "/"
         out = {}
         for k, v in self.taps.items():
             if k.startswith(prefix):
@@ -110,8 +126,11 @@ class Tape:
 
         ``acts``/``tap_zeros`` are the stacked (leading layer axis) trees
         returned as scan ys; keys get prefixed and marked with ``.s``.
+        Pops the scope prefix its paired :meth:`subtaps` pushed.
         """
         prefix = "/".join(self._prefix + [name]) + "/"
+        if _SCOPE_PREFIX and _SCOPE_PREFIX[-1] == prefix:
+            _SCOPE_PREFIX.pop()
         for k, v in acts.items():
             self.acts[prefix + k + ".s"] = v
         for k, v in tap_zeros.items():
@@ -165,23 +184,31 @@ def fix_scan_params(tree: dict, tapped: bool) -> dict:
 TAPE_POLICIES = ("native", "bf16", "int8", "recompute", "auto")
 
 # trace-time stacks for the activation-tape storage representation: models
-# create sub-Tapes deep inside scan bodies (subtape_run) where the engine's
-# per-tap policy map cannot reach (keys are still scope-relative), so the
-# ACTIVATION side of the residency policy is a uniform trace-scoped setting
-# ('recompute' keeps acts native — they ARE the standard tape). int8 uses
+# create sub-Tapes deep inside scan bodies (subtape_run) where keys are
+# still scope-relative, so the ACTIVATION side of the residency policy is a
+# trace-scoped setting — either a uniform store name, or a RESOLVER
+# callable(full_key) -> store that the engine builds from the policy's
+# per-group ``tape`` overrides (records inside scan bodies rebuild their
+# merged key from the _SCOPE_PREFIX stack pushed by Tape.subtaps).
+# ('recompute' keeps acts native — they ARE the standard tape.) int8 uses
 # the pushed rng; inside a scan body it is a trace constant, so every layer
 # reuses one rounding draw (documented; the held-cotangent side keys
 # per-path).
 _ACT_STORE: list = ["native"]
 _ACT_RNG: list = [None]
+_SCOPE_PREFIX: list = []
 
 
 class act_storage:
     """Context manager scoping the activation-tape storage representation
-    around a traced ``apply_fn`` call (engine-internal)."""
+    around a traced ``apply_fn`` call (engine-internal). ``store`` is a
+    store name, or a callable(full_tap_key) -> store name for per-tap
+    resolution (the callable must already map recompute/auto to native)."""
 
-    def __init__(self, store: str, rng=None):
-        self.store = "native" if store in ("recompute", "auto") else store
+    def __init__(self, store, rng=None):
+        if isinstance(store, str) and store in ("recompute", "auto"):
+            store = "native"
+        self.store = store
         self.rng = rng
 
     def __enter__(self):
@@ -244,5 +271,6 @@ def subtape_run(block_fn, params_l, taps_l, *args, collect: bool = True):
     aux dicts are empty (inference: no dead tap-zero scan outputs).
     """
     tape = Tape(taps_l, collect=collect)
+    tape._scan_sub = True
     out = block_fn(params_l, tape, *args)
     return out, (tape.acts, tape.tap_zeros)

@@ -173,6 +173,46 @@ def norm_plan(kind: str, act_shape, ds_shape, mode: str,
     return _cached(key, mk)
 
 
+def fused_plan(kind: str, act_shape, ds_shape, mode: str,
+               method: str = "") -> Plan:
+    """Per-tap plan for a STREAMED single-tap clip unit (scope='layer'):
+    phases 2+3 fused at the tap — per-sample norm, clip factor and weighted
+    grad in one pass over the cotangent.
+
+    method 'fused'  ONE kernel launch (kernels.fused_clip): per grid step the
+                    whole per-sample gradient g_b = a_b^T ds_b lives in VMEM,
+                    the norm/clip happen in-register, and C_b * g_b folds into
+                    the output accumulator — the contraction runs ONCE (the
+                    mixopt trick without the HBM cache). Chosen when the
+                    per-sample working set fits the VMEM budget. Not under
+                    mode 'bk' (forced-ghost norms) or a 'ghost' group
+                    override — those compose the ghost-norm kernel instead.
+    method 'split'  compose the existing norm + weighted-grad paths back to
+                    back (still streamed: nothing held between them).
+
+    impl 'jnp' on a fused plan is the einsum form of the same single-pass
+    contraction (instantiate g once, norm + weight it immediately)."""
+    key = ("fused", kind, tuple(act_shape), tuple(ds_shape), mode, method,
+           backend())
+
+    def mk():
+        if kind != "mm" or mode == "bk" or method == "ghost":
+            return Plan("jnp", "split", ())
+        a = act_shape if len(act_shape) == 4 else (1,) + tuple(act_shape)
+        L, B, T, d = a
+        p = ds_shape[-1]
+        # per grid step (one sample): a (L,T,d) + ds (L,T,p) operands, the
+        # instantiated g (L,d,p) and the (L,d,p) output accumulator
+        fits = 4 * (L * T * (d + p) + 2 * L * d * p) <= VMEM_BUDGET
+        if not fits:
+            return Plan("jnp", "split", ())
+        # the avoided intermediate is the second a^T ds contraction's reads
+        # plus the held cotangent — same scale as the direct-norm grid
+        return Plan(_impl(L * B * d * p), "fused", ())
+
+    return _cached(key, mk)
+
+
 def grad_plan(kind: str, act_shape, ds_shape, vocab: int = 0) -> Plan:
     """Per-tap plan for the phase-3 clip-weighted gradient (BK line 9)."""
     key = ("grad", kind, tuple(act_shape), tuple(ds_shape), vocab, backend())
@@ -256,7 +296,7 @@ def _hold_bytes(store: str, ds_elems: int, itemsize: int = 4) -> int:
     the 'bf16' store is a no-op there, never a halving."""
     return {"native": itemsize * ds_elems,
             "bf16": min(2, itemsize) * ds_elems,
-            "int8": ds_elems + 4, "recompute": 0}[store]
+            "int8": ds_elems + 4, "recompute": 0, "stream": 0}[store]
 
 
 def tape_plan(kind: str, act_shape, ds_shape, policy: str = "auto",
@@ -270,6 +310,14 @@ def tape_plan(kind: str, act_shape, ds_shape, policy: str = "auto",
     thresholds track the real footprint). ``recompute_flops`` models the
     phase-3 re-derivation: one backward from the loss down to this tap's
     site, ~2 * |ds| * d_in FLOPs for the site's own matmul chain."""
+    if policy == "stream":
+        # engine-assigned (not a user-requestable store): the tap belongs to
+        # a streamed single-tap clip unit — phases 2+3 fuse at the tap, the
+        # cotangent is consumed the moment it is produced, and NOTHING is
+        # held between phases. Zero hold bytes, zero re-derivation, and the
+        # REPRO_TAPE force does not apply (there is no record to store).
+        return TapePlan("stream", 0, 0, int(itemsize))
+
     key = ("tape", kind, tuple(act_shape), tuple(ds_shape), policy, method,
            int(itemsize), backend()) + _tape_env()
 

@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.clipped_grad import clipped_grad as _clipped_grad
+from repro.kernels.fused_clip import fused_clip_grad as _fused_clip
 from repro.kernels.emb_grad import emb_clipped_grad as _emb_grad
 from repro.kernels.emb_norm import emb_ghost_norm as _emb_norm
 from repro.kernels.flash_attention import flash_attention as _flash
@@ -39,6 +40,14 @@ def clipped_grad_mm(a, C, ds, block_d: int = 256, block_p: int = 256):
     """-> (d,p) f32, or (L,d,p) for stacked records. One launch either way."""
     return _clipped_grad(a, C, ds, block_d=block_d, block_p=block_p,
                          interpret=_interpret())
+
+
+def fused_clip_grad_mm(a, ds, w, clipping: str, R: float, gamma: float):
+    """One-pass norm+clip+grad for a streamed single-tap unit (scope=
+    'layer'): -> (G (d,p)/(L,d,p) f32, sq_norms (B,) f32). ``w`` is the
+    per-sample weight (batch-pad mask) folded into the clip factors."""
+    return _fused_clip(a, ds, w, clipping=clipping, R=float(R),
+                       gamma=float(gamma), interpret=_interpret())
 
 
 # ----------------------------------------------------------------- emb taps

@@ -30,9 +30,11 @@ OUT_ROOT = os.path.join(os.path.dirname(__file__), "../../../experiments/dryrun"
 
 
 def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
-             force: bool = False, dp_mode: str = "bk") -> dict:
+             force: bool = False, dp_mode: str = "bk",
+             clipping_scope: str = "") -> dict:
     os.makedirs(out_dir, exist_ok=True)
-    out_path = os.path.join(out_dir, f"{arch}__{shape}.json")
+    scope_tag = f"__scope_{clipping_scope}" if clipping_scope else ""
+    out_path = os.path.join(out_dir, f"{arch}__{shape}{scope_tag}.json")
     if os.path.exists(out_path) and not force:
         with open(out_path) as f:
             return json.load(f)
@@ -40,6 +42,8 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
     rec = {"arch": arch, "shape": shape,
            "mesh": "2x16x16" if multi_pod else "16x16",
            "dp_mode": dp_mode, "status": "ok"}
+    if clipping_scope:
+        rec["clipping_scope"] = clipping_scope
     cfg = get_config(arch)
     reason = skip_reason(cfg, SHAPES[shape])
     if reason:
@@ -48,7 +52,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
         try:
             mesh = make_production_mesh(multi_pod=multi_pod)
             t0 = time.time()
-            plan = plan_cell(arch, shape, mesh)
+            plan = plan_cell(arch, shape, mesh, clipping_scope=clipping_scope)
             lowered = plan.lower()
             rec["lower_s"] = round(time.time() - t0, 1)
             t1 = time.time()
@@ -87,6 +91,11 @@ def main():
     ap.add_argument("--multipod", action="store_true")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--dp-mode", default="bk")
+    ap.add_argument("--clipping-scope", default="",
+                    choices=["", "flat", "group", "layer"],
+                    help="re-scope trainable groups before planning (layer "
+                         "plans the streamed one-pass backward; results land "
+                         "in <arch>__<shape>__scope_<s>.json)")
     args = ap.parse_args()
 
     mesh_tag = "multipod_2x16x16" if args.multipod else "singlepod_16x16"
@@ -99,7 +108,7 @@ def main():
     n_ok = n_skip = n_err = 0
     for arch, shape in cells:
         rec = run_cell(arch, shape, args.multipod, out_dir, args.force,
-                       args.dp_mode)
+                       args.dp_mode, clipping_scope=args.clipping_scope)
         tag = rec["status"]
         n_ok += tag == "ok"
         n_skip += tag == "skip"

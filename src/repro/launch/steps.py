@@ -146,10 +146,13 @@ def _params_struct(model):
 
 def plan_cell(arch: str, shape_name: str, mesh, dp=None,
               microbatch: Optional[int] = None, cfg_patch: Optional[dict] = None,
-              optimizer: Optional[str] = None) -> CellPlan:
+              optimizer: Optional[str] = None,
+              clipping_scope: str = "") -> CellPlan:
     """``dp`` is a DPConfig, a PrivacyPolicy, or None — None picks the
     arch's registered policy preset when one exists (group-wise planning),
-    else the flat bk-mixopt DPConfig."""
+    else the flat bk-mixopt DPConfig. ``clipping_scope`` re-scopes every
+    trainable group (policy.with_scope) before planning — 'layer' plans the
+    streamed one-pass backward (train cells only)."""
     cfg = get_config(arch)
     if cfg_patch:
         cfg = cfg.with_(**cfg_patch)
@@ -173,6 +176,10 @@ def plan_cell(arch: str, shape_name: str, mesh, dp=None,
             dp = get_policy(arch, mode="bk-mixopt", sigma=1.0)
             policy_tag = f" policy={arch}({len(dp.groups)}g)"
         dp = dp or DPConfig(mode="bk-mixopt", clipping="automatic", sigma=1.0)
+        if clipping_scope:
+            from repro.core.policy import with_scope
+            dp = with_scope(dp, clipping_scope)
+            policy_tag += f" scope={clipping_scope}"
         mb = microbatch or TRAIN_MICROBATCH.get(arch, 16)
         opt_name = optimizer or TRAIN_OPTIMIZER.get(arch, "adamw")
         opt = make_optimizer(opt_name, lambda s: jnp.asarray(1e-4, jnp.float32))

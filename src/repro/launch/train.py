@@ -196,6 +196,15 @@ def train(model_cfg, tc: TrainConfig, dp, log=print,
         dp = dataclasses.replace(
             dp, **({"tape_policy": tc.tape} if tc.tape else {}),
             **({"tape_chunks": tc.tape_chunks} if tc.tape_chunks else {}))
+    if tc.clipping_scope:
+        # --clipping-scope re-scopes every trainable group (with_scope);
+        # 'layer' turns each param path into its own clip unit and the BK
+        # backward streams — one pass, nothing book-kept between phases
+        from repro.core.policy import with_scope
+        dp = with_scope(dp, tc.clipping_scope)
+        log(f"clipping scope: {tc.clipping_scope}"
+            + (" (per-path clip units; streamed one-pass backward)"
+               if tc.clipping_scope == "layer" else ""))
     policy = as_policy(dp)
     if tc.tape or tc.tape_chunks:
         log(f"tape residency: policy={policy.tape_policy} "
@@ -427,6 +436,13 @@ def main():
     ap.add_argument("--tape-chunks", type=int, default=0,
                     help="phase-3 re-derivation chunk count for recompute "
                          "taps (0 keeps the policy's)")
+    ap.add_argument("--clipping-scope", default="",
+                    choices=["", "flat", "group", "layer"],
+                    help="re-scope every trainable group's clipping norm: "
+                         "flat (one pool), group (per policy group), layer "
+                         "(each param path its own clip unit — the BK "
+                         "backward streams in one pass with nothing "
+                         "book-kept); '' keeps the preset's scopes")
     ap.add_argument("--mesh", default="",
                     help="data,model axis sizes for the train mesh "
                          "(e.g. 4,2); default: all devices on 'data'")
@@ -457,6 +473,7 @@ def main():
                      tree_completion=args.tree_completion,
                      policy=args.policy, autotune=args.autotune,
                      tape=args.tape, tape_chunks=args.tape_chunks,
+                     clipping_scope=args.clipping_scope,
                      mesh_data=mesh_data, mesh_model=mesh_model,
                      log_every=args.log_every,
                      checkpoint_dir=args.ckpt_dir,

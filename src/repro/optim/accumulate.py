@@ -90,7 +90,10 @@ def accumulated_clipped_sum(apply_fn, params, batch, cfg, microbatch: int,
                             mesh=None, rng=None):
     """Phases 1-3 over the logical batch: per-sample clipping inside each
     microbatch, clipped sums accumulated under lax.scan (one microbatch's
-    book-keeping live at a time). Returns (flat_sums, aux, B_logical) —
+    book-keeping live at a time — and under a layer-scope policy the
+    streamed single-tap units book-keep NOTHING, so the scan body's live
+    set is one fused norm+clip+grad launch per tap plus the accumulators).
+    Returns (flat_sums, aux, B_logical) —
     phase 4 (noise + 1/B) is the caller's, via ``finalize_noise`` or the
     fused ``policy.noise_leaf_fn`` + ``Optimizer.update_leaves`` path.
     ``rng`` keys the tape residency layer's int8 stochastic rounding (only

@@ -1,0 +1,346 @@
+"""Layer-scope clipping (scope="layer": every trainable param path is its
+own clip unit) and the streamed one-pass BK backward it unlocks.
+
+Parity contract:
+  * layer-scope grads match a vmap(grad) + hand-rolled per-unit clipping
+    reference across BK and baseline modes (the scope axis is engine-wide,
+    not a BK special case);
+  * the streamed path (default) is BITWISE identical to the two-phase
+    engine (REPRO_STREAM=0) when the fused kernel is off — streaming
+    reorders the schedule, not the math;
+  * with kernels on, the fused norm+clip+grad Pallas launch reassociates
+    one reduction, so streamed-vs-two-phase is allclose at 1e-6;
+  * plan_report marks every streamed tap with the engine-assigned "stream"
+    store and ZERO held tape bytes — the one-pass claim, checkable without
+    a profiler.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bk import DPConfig, bk_clipped_sum, monolithic_clipped_sum
+from repro.core.engine import ALL_MODES, PrivacyEngine, make_grad_fn
+from repro.core.policy import (ParamGroup, PrivacyPolicy, as_policy,
+                               resolve_policy, with_scope)
+from repro.core.tape import Tape
+from repro.kernels import dispatch
+from repro.models.mlp import MLP, MLPConfig
+from repro.utils.tree import flatten
+
+B = 8
+BK = ("bk", "bk-mixghost", "bk-mixopt")
+
+
+def _setup(bias=True):
+    model = MLP(MLPConfig(d_in=12, width=16, depth=3, n_classes=5, bias=bias))
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {
+        "x": jax.random.normal(jax.random.PRNGKey(1), (B, 12)),
+        "y": jax.random.randint(jax.random.PRNGKey(2), (B,), 0, 5),
+    }
+    return model, params, batch
+
+
+def _layer_policy(mode, **kw):
+    return with_scope(DPConfig(mode=mode, clipping="automatic", R=1.0,
+                               sigma=0.0, **kw), "layer")
+
+
+def _vmap_reference(model, params, batch, policy):
+    """vmap per-sample grads + hand-rolled per-unit clipping (same oracle as
+    test_policy, reused here because layer scope just makes more units)."""
+    res = resolve_policy(policy, flatten(params))
+    gfn = jax.grad(lambda p, s: model.apply(
+        p, jax.tree_util.tree_map(lambda x: x[None], s), Tape(None))[0])
+    per_g = flatten(jax.vmap(gfn, in_axes=(None, 0))(params, batch))
+    norms, C = {}, {}
+    for unit in res.units:
+        sq = sum(jnp.sum(jnp.square(per_g[p].reshape(B, -1)), axis=1)
+                 for p in unit.paths)
+        norms[unit.name] = jnp.sqrt(sq)
+        C[unit.name] = unit.clip_fn()(norms[unit.name])
+    out = {}
+    for p, g in per_g.items():
+        if p in res.frozen:
+            out[p] = jnp.zeros(g.shape[1:], g.dtype)
+        else:
+            unit = res.units[res.unit_of[p]]
+            out[p] = jnp.einsum("b...,b->...", g, C[unit.name]) / B
+    return out, norms
+
+
+def _assert_tree(got, want, *, bitwise=False, rtol=1e-5, atol=1e-6, msg=""):
+    for k, v in flatten(want).items():
+        g = np.asarray(flatten(got)[k])
+        if bitwise:
+            np.testing.assert_array_equal(g, np.asarray(v),
+                                          err_msg=f"{msg} {k}")
+        else:
+            np.testing.assert_allclose(g, np.asarray(v), rtol=rtol,
+                                       atol=atol, err_msg=f"{msg} {k}")
+
+
+# ------------------------------------------------------------------ resolution
+def test_with_scope_layer_one_unit_per_path():
+    _, params, _ = _setup()
+    res = resolve_policy(_layer_policy("bk"), flatten(params))
+    paths = sorted(flatten(params))
+    assert len(res.units) == len(paths)
+    for u in res.units:
+        assert len(u.paths) == 1
+        assert u.name.endswith(":" + u.paths[0])
+    # partition: every path in exactly one unit
+    seen = sorted(p for u in res.units for p in u.paths)
+    assert seen == paths
+
+
+def test_with_scope_keeps_frozen_groups():
+    _, params, _ = _setup()
+    policy = with_scope(PrivacyPolicy(groups=(
+        ParamGroup("frozen", r"l0/.*", trainable=False),
+        ParamGroup("rest", ".*", R=1.0, scope="group"),
+    ), mode="bk"), "layer")
+    assert policy.groups[0].trainable is False
+    assert policy.groups[0].scope != "layer" or not policy.groups[0].trainable
+    res = resolve_policy(policy, flatten(params))
+    assert all(p.startswith("l0/") for p in res.frozen)
+    assert all(len(u.paths) == 1 for u in res.units)
+
+
+# ---------------------------------------------------------------- correctness
+@pytest.mark.parametrize("mode", ["bk", "bk-mixghost", "bk-mixopt", "opacus",
+                                  "ghostclip"])
+def test_layer_scope_matches_vmap_reference(mode):
+    model, params, batch = _setup()
+    policy = _layer_policy(mode)
+    ref, ref_norms = _vmap_reference(model, params, batch, policy)
+    got, aux = jax.jit(make_grad_fn(model.apply, policy))(
+        params, batch, jax.random.PRNGKey(7))
+    for name, n in ref_norms.items():
+        np.testing.assert_allclose(aux["group_norms"][name], n,
+                                   rtol=1e-5, atol=1e-6, err_msg=name)
+    for p, g in sorted(flatten(got).items()):
+        np.testing.assert_allclose(g, ref[p], rtol=1e-4, atol=1e-6,
+                                   err_msg=f"{mode}:{p}")
+
+
+@pytest.mark.parametrize("mode", BK)
+def test_streamed_bitwise_vs_two_phase_without_kernels(mode, monkeypatch):
+    """With the fused kernel off, streaming is an op-identical reordering of
+    the two-phase engine: phase 2+3 fuse at the tap, same primitives, same
+    order per tap -> bitwise."""
+    model, params, batch = _setup()
+    policy = _layer_policy(mode)
+    monkeypatch.setenv("REPRO_KERNELS", "0")
+    dispatch.clear_cache()
+    try:
+        fn = lambda: jax.jit(
+            lambda p, b: bk_clipped_sum(model.apply, p, b, policy,
+                                        rng=jax.random.PRNGKey(3)))(
+                params, batch)
+        monkeypatch.setenv("REPRO_STREAM", "1")
+        got, _ = fn()
+        monkeypatch.setenv("REPRO_STREAM", "0")
+        two_phase, _ = fn()
+        _assert_tree(got, two_phase, bitwise=True, msg=mode)
+    finally:
+        dispatch.clear_cache()
+
+
+@pytest.mark.parametrize("mode", BK)
+def test_streamed_close_vs_two_phase_with_kernels(mode, monkeypatch):
+    """Kernels on (default): the fused norm+clip+grad launch computes the
+    same quantities in one reduction order -> tight allclose."""
+    model, params, batch = _setup()
+    policy = _layer_policy(mode)
+    dispatch.clear_cache()
+    fn = lambda: jax.jit(
+        lambda p, b: bk_clipped_sum(model.apply, p, b, policy,
+                                    rng=jax.random.PRNGKey(3)))(params, batch)
+    got, aux = fn()
+    monkeypatch.setenv("REPRO_STREAM", "0")
+    two_phase, taux = fn()
+    _assert_tree(got, two_phase, rtol=1e-5, atol=1e-6, msg=mode)
+    np.testing.assert_allclose(np.asarray(aux["per_sample_norms"]),
+                               np.asarray(taux["per_sample_norms"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("mode", [m for m in ALL_MODES
+                                  if m != "nonprivate"])
+def test_layer_scope_across_all_modes(mode):
+    """Every clipping mode accepts a layer-scope policy and agrees with the
+    vmap reference under it — the scope axis is engine-wide, not a BK
+    special case (nonprivate has no clipping, so no scope)."""
+    model, params, batch = _setup()
+    policy = _layer_policy(mode)
+    ref, _ = _vmap_reference(model, params, batch, policy)
+    got, _ = jax.jit(make_grad_fn(model.apply, policy))(
+        params, batch, jax.random.PRNGKey(3))
+    for p, g in sorted(flatten(got).items()):
+        np.testing.assert_allclose(g, ref[p], rtol=1e-4, atol=1e-6,
+                                   err_msg=f"{mode}:{p}")
+
+
+# --------------------------------------------------------------- fused kernel
+def test_fused_kernel_matches_einsum_reference():
+    from repro.core.clipping import get_clip_fn
+    from repro.kernels import ops as kops
+    rng = jax.random.PRNGKey(0)
+    a = jax.random.normal(rng, (B, 4, 24))
+    ds = jax.random.normal(jax.random.fold_in(rng, 1), (B, 4, 10))
+    w = jnp.abs(jax.random.normal(jax.random.fold_in(rng, 2), (B,)))
+    g_b = jnp.einsum("btd,btp->bdp", a, ds)
+    sq_ref = jnp.sum(g_b.reshape(B, -1) ** 2, axis=1)
+    clip = get_clip_fn("automatic", 1.0, gamma=0.01)
+    c = clip(jnp.sqrt(sq_ref)) * w
+    out_ref = jnp.einsum("bdp,b->dp", g_b, c)
+    out, sq = kops.fused_clip_grad_mm(a, ds, w, "automatic", 1.0, 0.01)
+    np.testing.assert_allclose(np.asarray(sq), np.asarray(sq_ref),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_kernel_stacked_layers():
+    from repro.kernels import ops as kops
+    L = 3
+    rng = jax.random.PRNGKey(4)
+    a = jax.random.normal(rng, (L, B, 4, 16))
+    ds = jax.random.normal(jax.random.fold_in(rng, 1), (L, B, 4, 8))
+    w = jnp.ones((B,))
+    g_b = jnp.einsum("lbtd,lbtp->bldp", a, ds)
+    sq_ref = jnp.sum(g_b.reshape(B, -1) ** 2, axis=1)
+    c = jnp.minimum(1.0, 1.0 / jnp.maximum(jnp.sqrt(sq_ref), 1e-12))
+    out_ref = jnp.einsum("bldp,b->ldp", g_b, c)
+    out, sq = kops.fused_clip_grad_mm(a, ds, w, "abadi", 1.0, 0.01)
+    np.testing.assert_allclose(np.asarray(sq), np.asarray(sq_ref),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+# -------------------------------------------------------------- observability
+def test_plan_report_streams_layer_taps():
+    """Acceptance: one forward + one backward — every streamed tap plans
+    the engine-assigned 'stream' store with ZERO held tape bytes, and the
+    fused plan participates for mm taps."""
+    model, params, batch = _setup()
+    report = PrivacyEngine(
+        model.apply, _layer_policy("bk-mixopt")).kernel_report(params, batch)
+    assert report
+    held = 0
+    for key, plans in report.items():
+        assert plans["tape"].store == "stream", key
+        assert plans["tape"].hold_bytes == 0, key
+        held += plans["tape"].hold_bytes
+        if key.endswith("#mm"):
+            assert "fused" in plans, key
+    assert held == 0
+
+
+def test_plan_report_flat_scope_unchanged():
+    """Flat scope never streams: report keeps the pre-layer-scope contract
+    (no 'stream' store, no 'fused' entry)."""
+    model, params, batch = _setup()
+    report = PrivacyEngine(
+        model.apply, DPConfig(mode="bk-mixopt")).kernel_report(params, batch)
+    for key, plans in report.items():
+        assert set(plans) == {"norm", "grad", "tape"}, key
+        assert plans["tape"].store != "stream", key
+
+
+def test_stream_env_kill_switch(monkeypatch):
+    monkeypatch.setenv("REPRO_STREAM", "0")
+    model, params, batch = _setup()
+    report = PrivacyEngine(
+        model.apply, _layer_policy("bk-mixopt")).kernel_report(params, batch)
+    assert all(p["tape"].store != "stream" for p in report.values())
+
+
+def test_stream_store_not_user_requestable():
+    with pytest.raises(ValueError, match="tape"):
+        ParamGroup("g", ".*", tape="stream")
+    with pytest.raises(ValueError, match="tape_policy"):
+        PrivacyPolicy(groups=(ParamGroup("all", ".*"),),
+                      tape_policy="stream")
+
+
+# ------------------------------------------------------- scan-stacked models
+def _smoke():
+    from repro.configs.registry import build, smoke_config
+    cfg = smoke_config("qwen2-1.5b").with_(dtype="float32",
+                                           param_dtype="float32")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 16),
+                                          0, cfg.vocab)}
+    return model, params, batch
+
+
+def test_layer_scope_on_scanned_transformer():
+    """Stacked taps (scan body, '.s' keys) stream too: layer-scope grads on
+    a real transformer match the monolithic oracle."""
+    model, params, batch = _smoke()
+    policy = _layer_policy("bk-mixopt")
+    ref, _ = jax.jit(
+        lambda p, b: monolithic_clipped_sum(model.apply, p, b,
+                                            policy))(params, batch)
+    got, _ = jax.jit(
+        lambda p, b: bk_clipped_sum(model.apply, p, b, policy,
+                                    rng=jax.random.PRNGKey(3)))(params, batch)
+    _assert_tree(got, ref, rtol=1e-4, atol=1e-5, msg="scan")
+
+
+def test_scan_group_tape_override_is_scope_relative():
+    """Satellite: ParamGroup.tape matches taps INSIDE scan bodies — the
+    stacked '<prefix><key>.s' tap resolves through the group of its weight
+    path, so a group pinning blocks/mlp to bf16 shows up on the stacked
+    tap while everything else keeps the policy default."""
+    model, params, batch = _smoke()
+    policy = PrivacyPolicy(groups=(
+        ParamGroup("mlp", r"blocks/mlp/.*", R=1.0, scope="group",
+                   tape="bf16"),
+        ParamGroup("rest", ".*", R=1.0, scope="group"),
+    ), mode="bk", tape_policy="native")
+    report = PrivacyEngine(model.apply, policy).kernel_report(params, batch)
+    stores = {k: p["tape"].store for k, p in report.items()}
+    mlp_keys = [k for k in stores if k.startswith("blocks/mlp/")]
+    assert mlp_keys, stores
+    assert all(stores[k] == "bf16" for k in mlp_keys), stores
+    assert all(s == "native" for k, s in stores.items()
+               if not k.startswith("blocks/mlp/")), stores
+    ref, _ = jax.jit(
+        lambda p, b: monolithic_clipped_sum(model.apply, p, b,
+                                            with_scope(policy, "group")))(
+        params, batch)
+    got, _ = jax.jit(
+        lambda p, b: bk_clipped_sum(model.apply, p, b, policy))(params, batch)
+    _assert_tree(got, ref, rtol=1e-2, atol=5e-3, msg="scan-override")
+
+
+# ------------------------------------------------------------------ training
+def test_train_loop_layer_vs_flat():
+    """Seeded 12-step run: layer scope trains (loss decreases) and lands
+    within tolerance of the flat-scope run — scope changes the clipping
+    geometry, not the optimization."""
+    from repro.configs.base import TrainConfig
+    from repro.configs.registry import smoke_config
+    from repro.launch.train import train
+
+    cfg = smoke_config("qwen2-1.5b").with_(dtype="float32",
+                                           param_dtype="float32")
+    dp = DPConfig(mode="bk-mixopt", clipping="automatic", sigma=0.3)
+    tc = TrainConfig(global_batch=8, microbatch=4, seq_len=16, steps=12,
+                     lr=2e-3, policy="")
+    _, flat_losses = train(cfg, tc, dp, log=lambda *a: None)
+    import dataclasses
+    tc_layer = dataclasses.replace(tc, clipping_scope="layer")
+    _, layer_losses = train(cfg, tc_layer, dp, log=lambda *a: None)
+    assert len(layer_losses) == 12
+    assert np.mean(layer_losses[-3:]) < np.mean(layer_losses[:3])
+    assert abs(np.mean(layer_losses[-3:]) - np.mean(flat_losses[-3:])) \
+        < 0.25 * np.mean(flat_losses[-3:])

@@ -93,7 +93,7 @@ def test_flat_groups_must_agree_on_R():
 
 def test_bad_scope_and_method_raise():
     with pytest.raises(ValueError, match="scope"):
-        ParamGroup("x", ".*", scope="layer")
+        ParamGroup("x", ".*", scope="tensor")
     with pytest.raises(ValueError, match="method"):
         ParamGroup("x", ".*", method="magic")
 

@@ -81,6 +81,33 @@ def test_streamed_matches_monolithic(mode, tape, chunks):
                                atol=1e-3)
 
 
+@pytest.mark.parametrize("mode", BK)
+@pytest.mark.parametrize("tape", ["native", "bf16", "int8"])
+def test_streamed_matches_monolithic_layer_scope(mode, tape):
+    """The monolithic oracle accepts layer-scope policies (it is
+    unit-generic), so the documented tolerances extend to the new scope.
+    Under scope='layer' every single-tap unit streams (fused phase-2+3 at
+    the tap); 'native' is allclose rather than bitwise because the fused
+    kernel reassociates one reduction, while compressed stores keep their
+    flat-scope tolerances."""
+    from repro.core.policy import with_scope
+    model, params, batch = _setup()
+    policy = with_scope(DPConfig(mode=mode, tape_policy=tape,
+                                 clipping="automatic"), "layer")
+    ref, raux = jax.jit(
+        lambda p, b: monolithic_clipped_sum(model.apply, p, b,
+                                            policy))(params, batch)
+    got, aux = jax.jit(
+        lambda p, b: bk_clipped_sum(model.apply, p, b, policy,
+                                    rng=jax.random.PRNGKey(3)))(params, batch)
+    tol = dict(rtol=1e-4, atol=1e-6) if tape == "native" else TOLS[tape]
+    _assert_tree(got, ref, **tol, msg=f"layer/{mode}/{tape}")
+    np.testing.assert_allclose(np.asarray(aux["per_sample_norms"]),
+                               np.asarray(raux["per_sample_norms"]),
+                               rtol=5e-2 if tape == "int8" else 1e-2,
+                               atol=1e-3)
+
+
 @pytest.mark.parametrize("mode", ALL_MODES)
 def test_tape_policy_across_all_modes(mode):
     """All 8 modes accept a tape policy: BK modes stream (recompute matches
