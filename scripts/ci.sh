@@ -15,23 +15,28 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 BASELINE="${TIER1_BASELINE_FAILURES:-0}"
-# floor excludes tests/test_sharded_step.py (8 tests): it gates in its own
-# dedicated stage below. PR 5 added tests/test_tape_residency.py (32) and
+# floor excludes tests/test_sharded_step.py (8 tests) and
+# tests/test_elastic_restart.py (11): each gates in its own dedicated stage
+# below. PR 5 added tests/test_tape_residency.py (32) and
 # tests/test_compression.py (10 without hypothesis): counted suite was 332
 # when hypothesis is absent. PR 6 added tests/test_layer_scope.py (29) and
 # 9 layer-scope cases in test_tape_residency: counted suite is 370. The
-# floor sits 4 below that because installing hypothesis REPLACES
-# test_compression's 5 parametrized fallback cases with 1 @given test
-# (net -4 there, while unskipping test_ghost_properties adds tests) — the
-# floor must not fail a fuller environment.
-PASS_FLOOR="${TIER1_BASELINE_PASSED:-366}"
+# elastic-restart PR added tests/test_fault_tolerance.py (14) and 5 ledger
+# tests in test_accounting: counted suite is 389. The floor sits 4 below
+# that because installing hypothesis REPLACES test_compression's 5
+# parametrized fallback cases with 1 @given test (net -4 there, while
+# unskipping test_ghost_properties adds tests) — the floor must not fail a
+# fuller environment.
+PASS_FLOOR="${TIER1_BASELINE_PASSED:-385}"
 LOG="$(mktemp)"
 trap 'rm -f "$LOG"' EXIT
 
 echo "== tier-1: pytest (baseline: <=$BASELINE failed, >=$PASS_FLOOR passed) =="
-# test_sharded_step runs in its own dedicated stage below — running its
-# multi-minute 8-fake-device subprocesses twice per CI pass is pure waste
-python -m pytest -q --ignore=tests/test_sharded_step.py 2>&1 | tee "$LOG"
+# test_sharded_step and test_elastic_restart run in their own dedicated
+# stages below — running their multi-minute subprocess fleets twice per CI
+# pass is pure waste
+python -m pytest -q --ignore=tests/test_sharded_step.py \
+    --ignore=tests/test_elastic_restart.py 2>&1 | tee "$LOG"
 failed="$(grep -oE '[0-9]+ failed' "$LOG" | tail -1 | grep -oE '[0-9]+' || echo 0)"
 passed="$(grep -oE '[0-9]+ passed' "$LOG" | tail -1 | grep -oE '[0-9]+' || echo 0)"
 errors="$(grep -oE '[0-9]+ errors?([, ]|$)' "$LOG" | tail -1 | grep -oE '[0-9]+' || echo 0)"
@@ -69,6 +74,39 @@ python -m repro.launch.train --smoke --steps 3 --batch 4 --seq 16 \
     --clipping-scope layer --log-every 1
 layer=$?
 
+echo "== crash/resume smoke: train -> SIGKILL -> resume -> compare =="
+# the gating restart-correctness demonstration, through the production CLI:
+# an uninterrupted reference run, a run SIGKILLed mid-training (the
+# fault-injection env channel), and a restart with the SAME command line.
+# The resumed run must report bitwise-identical final params (sha256) and
+# an identical epsilon — anything else means the restart re-drew noise or
+# the ledger lost/double-counted accounted steps.
+smoke_train() {
+    python -m repro.launch.train --smoke --steps 6 --batch 4 --seq 16 \
+        --lr 1e-3 --mode bk --policy "" --sigma 0.5 --log-every 100 "$@"
+}
+CR="$(mktemp -d)"
+crash=0
+smoke_train --out "$CR/ref.json" || crash=1
+# subshell: an env-prefix on a bash FUNCTION call leaks the variable into
+# the parent shell, which would crash the resume run below too
+(export REPRO_FAULT="step@4:sigkill"
+ smoke_train --ckpt-dir "$CR/ck" --ckpt-every 2 --out "$CR/na.json")
+rc=$?
+if [ "$rc" -ne 137 ]; then
+    echo "crash run exited $rc, expected 137 (SIGKILL)"; crash=1
+fi
+smoke_train --ckpt-dir "$CR/ck" --ckpt-every 2 --out "$CR/resumed.json" \
+    || crash=1
+python scripts/compare_runs.py "$CR/ref.json" "$CR/resumed.json" || crash=1
+rm -rf "$CR"
+
+echo "== elastic restart: fault-injected subprocess suite =="
+# the full acceptance matrix (SGD + FTRL bitwise resume, SIGTERM
+# preemption, kill-mid-checkpoint-write, cross-device-count restore)
+python -m pytest tests/test_elastic_restart.py -q
+elastic=$?
+
 echo "== benchmarks: validation (--fast) =="
 python -m benchmarks.run --fast
 bench=$?
@@ -89,8 +127,8 @@ echo "== benchmarks: step bench (--fast, writes BENCH_step.json, gated) =="
 STEP_GATE_TOKS_TOL="${STEP_GATE_TOKS_TOL:-0.5}" python -m benchmarks.step_bench --fast
 stepb=$?
 
-echo "ci summary: tier1=$tier1 (passed=$passed failed=$failed baseline=$BASELINE) sharded=$sharded layer_smoke=$layer bench=$bench kernel_bench=$kern step_bench=$stepb"
-for rc in $tier1 $sharded $layer $bench $kern $stepb; do
+echo "ci summary: tier1=$tier1 (passed=$passed failed=$failed baseline=$BASELINE) sharded=$sharded layer_smoke=$layer crash_resume=$crash elastic=$elastic bench=$bench kernel_bench=$kern step_bench=$stepb"
+for rc in $tier1 $sharded $layer $crash $elastic $bench $kern $stepb; do
     [ "$rc" -ne 0 ] && exit "$rc"
 done
 exit 0

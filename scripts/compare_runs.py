@@ -1,0 +1,48 @@
+"""Compare two train-run summaries (launch.train --out json) for
+restart-exactness: the resumed run must have actually resumed, reach the
+same final params BITWISE (sha256) and report the identical epsilon.
+
+    python scripts/compare_runs.py ref.json resumed.json
+
+Exit 0 on exact match; nonzero with a diagnosis otherwise. Used by the
+ci.sh crash/resume gating stage."""
+import json
+import sys
+
+
+def main(ref_path: str, got_path: str) -> int:
+    with open(ref_path) as f:
+        ref = json.load(f)
+    with open(got_path) as f:
+        got = json.load(f)
+    problems = []
+    if got.get("resumed_from", 0) <= 0:
+        problems.append("resume never engaged (resumed_from="
+                        f"{got.get('resumed_from')!r}) — the run restarted "
+                        "from scratch, which proves nothing")
+    if got["steps_done"] != ref["steps_done"]:
+        problems.append(f"steps_done {got['steps_done']} != "
+                        f"{ref['steps_done']}")
+    if got["params_sha256"] != ref["params_sha256"]:
+        problems.append("final params DIVERGED (sha256 "
+                        f"{got['params_sha256'][:12]}... != "
+                        f"{ref['params_sha256'][:12]}...) — the restart "
+                        "re-drew noise or lost state")
+    if got["epsilon"] != ref["epsilon"]:
+        problems.append(f"epsilon DIVERGED ({got['epsilon']} != "
+                        f"{ref['epsilon']}) — the ledger lost or "
+                        "double-counted accounted steps")
+    if problems:
+        for p in problems:
+            print(f"compare_runs: {p}", file=sys.stderr)
+        return 1
+    print("crash/resume smoke OK: bitwise params + identical epsilon "
+          f"(eps={ref['epsilon']:.4f}, resumed_from={got['resumed_from']})")
+    return 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 3:
+        print(__doc__, file=sys.stderr)
+        sys.exit(2)
+    sys.exit(main(sys.argv[1], sys.argv[2]))

@@ -1,14 +1,38 @@
-"""Fault-tolerant checkpointing.
+"""Fault-tolerant, process-sliced checkpointing.
 
-Design (multi-pod): every parameter is saved as its GLOBAL array under its
-tree path — checkpoints are sharding-agnostic, so a restart may load onto a
-different mesh shape (elastic re-scale) and simply applies the new sharding
-at restore (device_put against the template). Writes are atomic
-(tmp-dir + rename); a manifest records step, keys, sizes and a checksum per
-array so a torn write is detected and the previous checkpoint is used.
-On a real multi-host pod each host would write its addressable shards
-(process-sliced npz) with the same manifest/rename protocol; on this
-single-process container the global save exercises the same code path.
+Format (v2): a checkpoint directory holds one or more shard payload files
+plus a manifest —
+
+    step_0000000042/
+        shards.00000.npz    # process 0's addressable slices
+        [shards.00001.npz]  # further processes on a multi-host pod
+        manifest.json       # written LAST; global shapes + slice index
+
+Every leaf is stored as its set of UNIQUE addressable shard slices, each
+keyed by its global offset, with the leaf's GLOBAL shape/dtype recorded in
+the manifest. Restore re-assembles the global arrays from whatever slice
+decomposition the saving topology produced and validates COMPLETENESS
+(every element covered; replicated copies must agree) — so a checkpoint
+written by an 8-device (4, 2) mesh restores onto 1 device, 2 hosts, or any
+other mesh shape (elastic re-scale), with the new sharding applied at
+``device_put`` time against the caller's templates.
+
+Crash atomicity: all payload is written into ``<final>.tmp``, each file is
+fsync'd, the manifest is written last (also fsync'd, then the directory),
+and the tmp dir is atomically renamed into place. A crash at ANY point
+before the rename leaves only a ``.tmp`` directory that ``steps()`` never
+lists; a torn final directory (manual tampering, partial copy) is rejected
+by ``_valid`` (file sizes + slice-key sets checked against the manifest)
+and ``latest_step`` falls back to the previous checkpoint. The fault sites
+``ckpt_mid_write`` / ``ckpt_pre_commit`` (``runtime.fault_injection``) let
+tests SIGKILL the writer at exactly those points.
+
+Donation safety (the copy-before-donate contract): the train loop donates
+the whole TrainState into every jitted step, so ``shard_snapshot`` copies
+every leaf ON DEVICE first — synchronously, before the caller dispatches
+the next step — and the background writer thread reads host views of those
+throwaway copies only. The device->host DMA and the npz write both happen
+on the writer thread; only the device-side copy is on the critical path.
 """
 from __future__ import annotations
 
@@ -16,37 +40,48 @@ import json
 import os
 import shutil
 import zlib
+from dataclasses import dataclass
+from typing import Optional
 
 import jax
 import numpy as np
 
+from repro.runtime.fault_injection import maybe_fault
 from repro.utils.tree import flatten, unflatten
 
 MANIFEST = "manifest.json"
+FORMAT_VERSION = 2
 
 
 def _ckpt_dir(root: str, step: int) -> str:
     return os.path.join(root, f"step_{step:010d}")
 
 
+def _shard_file(process_index: int) -> str:
+    return f"shards.{process_index:05d}.npz"
+
+
+# ------------------------------------------------------------------ snapshot
+@dataclass
+class ShardSlice:
+    """One process-addressable slice of one leaf. ``data`` may be a
+    single-device jax.Array (host transfer deferred to the writer thread)
+    or a numpy array."""
+    path: str
+    offset: tuple                # global start index per dim
+    shape: tuple                 # slice shape
+    global_shape: tuple
+    dtype: str
+    data: object
+
+    def key(self) -> str:
+        return f"{self.path}@{'x'.join(map(str, self.offset))}"
+
+
 def host_snapshot(state: dict) -> dict:
     """Synchronous device->host copy of a pytree (global arrays gathered).
-
-    The copy-before-donate contract: the train loop donates the whole
-    TrainState into every jitted step, so any ASYNC reader (the checkpoint
-    writer thread) must work from a host copy taken BEFORE the next step is
-    dispatched — reading a donated jax.Array raises (or worse, on a runtime
-    without the guard, reads reused memory). Blocks until the values are
-    ready, which also bounds how far the loop can run ahead of the
-    checkpoint cadence.
-
-    The device-side copy is load-bearing: on the CPU backend a host view of
-    a jax.Array is ZERO-COPY and gets CACHED on the array, pinning its
-    buffer with an external reference for the array's remaining lifetime —
-    the runtime then (correctly) refuses to donate it, silently costing a
-    full state copy inside every subsequent step. Copying on device first
-    makes the host view alias the throwaway copy instead; the original
-    state stays donation-clean."""
+    Kept for callers that want a plain numpy tree; the checkpoint writer
+    itself uses :func:`shard_snapshot` (slice-sized host buffers)."""
     import jax.numpy as jnp
     flat = flatten(state)
     out = {}
@@ -57,36 +92,137 @@ def host_snapshot(state: dict) -> dict:
     return unflatten(out)
 
 
-def save(root: str, step: int, state: dict, keep: int = 3) -> str:
-    """Atomically persist a pytree; returns the checkpoint path."""
-    os.makedirs(root, exist_ok=True)
-    final = _ckpt_dir(root, step)
-    tmp = final + ".tmp"
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
-    os.makedirs(tmp)
+def shard_snapshot(state) -> list:
+    """-> list[ShardSlice]: each leaf's unique addressable slices, backed by
+    fresh DEVICE-SIDE copies.
 
-    flat = flatten(state)
-    manifest = {"step": step, "arrays": {}}
-    arrays = {}
-    for path, leaf in flat.items():
-        arr = np.asarray(jax.device_get(leaf))
-        arrays[path] = arr
-        manifest["arrays"][path] = {
-            "shape": list(arr.shape), "dtype": str(arr.dtype),
-            "crc": zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF,
+    The device copy is load-bearing twice over: (a) the caller is about to
+    donate the original state into the next step, so any async reader must
+    not touch it; (b) on the CPU backend a host view of a jax.Array is
+    ZERO-COPY and gets cached on the array, pinning its buffer with an
+    external reference — which would silently disable donation for the rest
+    of the run. Copying device-side first makes every later host view alias
+    the throwaway copy. Replicated shards (several devices holding the same
+    slice) are deduped by offset — each process writes each unique slice
+    once."""
+    import jax.numpy as jnp
+    slices = []
+    for path, leaf in flatten(state).items():
+        if isinstance(leaf, jax.Array):
+            copy = jnp.array(leaf, copy=True)   # sharding-preserving copy
+            seen = set()
+            for shard in copy.addressable_shards:
+                off = tuple(int(s.start or 0) for s in shard.index)
+                if off in seen:
+                    continue
+                seen.add(off)
+                slices.append(ShardSlice(
+                    path, off, tuple(shard.data.shape), tuple(leaf.shape),
+                    str(leaf.dtype), shard.data))
+        else:
+            arr = np.asarray(leaf)
+            slices.append(ShardSlice(path, (0,) * arr.ndim, tuple(arr.shape),
+                                     tuple(arr.shape), str(arr.dtype), arr))
+    return slices
+
+
+# ---------------------------------------------------------------------- save
+def _fsync_write(fp: str, write_fn) -> int:
+    with open(fp, "wb") as f:
+        write_fn(f)
+        f.flush()
+        os.fsync(f.fileno())
+    return os.path.getsize(fp)
+
+
+def _fsync_dir(d: str) -> None:
+    fd = os.open(d, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def write_shard_file(tmp: str, process_index: int, slices: list):
+    """Write ONE process's payload file into the staging dir.
+    -> (fname, file_info, arrays_meta): the manifest fragments this
+    process contributes. Multi-host saves call this once per process;
+    :func:`commit` (process 0, after a barrier) unions the fragments."""
+    fname = _shard_file(process_index)
+    entries, arrays, arrays_meta = {}, {}, {}
+    for s in slices:
+        arr = np.ascontiguousarray(np.asarray(s.data))
+        key = s.key()
+        arrays[key] = arr
+        entries[key] = {
+            "path": s.path, "offset": list(s.offset),
+            "shape": list(arr.shape),
+            "crc": zlib.crc32(arr.tobytes()) & 0xFFFFFFFF,
         }
-    np.savez(os.path.join(tmp, "arrays.npz"),
-             **{k: v for k, v in arrays.items()})
-    with open(os.path.join(tmp, MANIFEST), "w") as f:
-        json.dump(manifest, f)
+        arrays_meta[s.path] = {"shape": list(s.global_shape),
+                               "dtype": s.dtype}
+    nbytes = _fsync_write(os.path.join(tmp, fname),
+                          lambda f: np.savez(f, **arrays))
+    maybe_fault("ckpt_mid_write")   # payload on disk, manifest NOT
+    return fname, {"bytes": nbytes, "entries": entries}, arrays_meta
+
+
+def commit(root: str, step: int, tmp: str, files: dict, arrays: dict,
+           meta: Optional[dict] = None, keep: int = 3,
+           process_count: int = 1) -> str:
+    """Write the manifest over the staged payload files and atomically
+    rename the staging dir into place. ``files``/``arrays`` are the unioned
+    fragments from every process's :func:`write_shard_file`."""
+    manifest = {
+        "format": FORMAT_VERSION, "step": step, "meta": meta or {},
+        "process_count": process_count,
+        "arrays": arrays, "files": files,
+    }
+    _fsync_write(os.path.join(tmp, MANIFEST),
+                 lambda f: f.write(json.dumps(manifest).encode()))
+    _fsync_dir(tmp)
+
+    maybe_fault("ckpt_pre_commit")  # everything written, NOT renamed
+
+    final = _ckpt_dir(root, step)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
+    _fsync_dir(root)
     _gc(root, keep)
     return final
 
 
+def stage_dir(root: str, step: int, fresh: bool = True) -> str:
+    """Create (or reuse) the staging dir a save writes into before commit."""
+    os.makedirs(root, exist_ok=True)
+    tmp = _ckpt_dir(root, step) + ".tmp"
+    if fresh and os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    return tmp
+
+
+def save(root: str, step: int, state, keep: int = 3,
+         meta: Optional[dict] = None, process_index: int = 0,
+         process_count: int = 1) -> str:
+    """Atomically persist a pytree (or a precomputed ``shard_snapshot``
+    list); returns the committed checkpoint path.
+
+    ``meta`` is an arbitrary json-able dict stored in the manifest — the
+    RunState packer puts the noise-mechanism state, the privacy ledger and
+    the pipeline cursor there. On a multi-host pod every process runs
+    ``write_shard_file`` for its addressable slices and process 0 runs
+    ``commit`` after a barrier; this single-process entry point does both,
+    through the same code path the tests drive piecewise."""
+    slices = state if isinstance(state, list) else shard_snapshot(state)
+    tmp = stage_dir(root, step, fresh=(process_index == 0))
+    fname, finfo, arrays = write_shard_file(tmp, process_index, slices)
+    return commit(root, step, tmp, {fname: finfo}, arrays, meta, keep,
+                  process_count)
+
+
+# ----------------------------------------------------------------- discovery
 def steps(root: str):
     if not os.path.isdir(root):
         return []
@@ -100,17 +236,36 @@ def steps(root: str):
     return sorted(out)
 
 
+def _manifest(root: str, step: int) -> dict:
+    with open(os.path.join(_ckpt_dir(root, step), MANIFEST)) as f:
+        manifest = json.load(f)
+    if manifest.get("format") != FORMAT_VERSION:
+        raise IOError(
+            f"checkpoint format {manifest.get('format')!r} at step {step}; "
+            f"this build reads format {FORMAT_VERSION}")
+    return manifest
+
+
 def _valid(root: str, step: int) -> bool:
+    """Cheap structural validation: manifest parses, every payload file
+    exists at its recorded byte size, and its npz members match the
+    manifest's slice index exactly. (Content CRCs are verified at restore —
+    a full read per candidate would make ``latest_step`` O(checkpoint)
+    instead of O(metadata).)"""
     d = _ckpt_dir(root, step)
-    mf = os.path.join(d, MANIFEST)
-    if not (os.path.isfile(mf) and os.path.isfile(os.path.join(d, "arrays.npz"))):
-        return False
     try:
-        with open(mf) as f:
-            manifest = json.load(f)
-        with np.load(os.path.join(d, "arrays.npz")) as z:
-            keys = set(z.files)
-        return set(manifest["arrays"]) == keys
+        manifest = _manifest(root, step)
+        files = manifest["files"]
+        if not files:
+            return False
+        for fname, info in files.items():
+            fp = os.path.join(d, fname)
+            if not os.path.isfile(fp) or os.path.getsize(fp) != info["bytes"]:
+                return False
+            with np.load(fp) as z:
+                if set(z.files) != set(info["entries"]):
+                    return False
+        return True
     except Exception:
         return False
 
@@ -123,34 +278,70 @@ def latest_step(root: str):
     return None
 
 
+# ------------------------------------------------------------------- restore
 def restore(root: str, step=None, template=None, shardings=None):
-    """Load a checkpoint. template (pytree) enforces structure and dtypes;
-    shardings (pytree of jax.sharding) re-shards onto the CURRENT mesh —
+    """Load a checkpoint -> (state, step, meta).
+
+    Re-assembles every leaf's GLOBAL array from the saved slices, whatever
+    topology wrote them: each slice is CRC-checked, duplicate offsets
+    (replicated shards, possibly from different processes) must agree, and
+    coverage is validated element-wise — a missing process file or a
+    dropped slice raises instead of silently restoring zeros.
+
+    ``template`` (pytree) enforces structure and dtypes for the keys it
+    names; checkpoint keys OUTSIDE the template (e.g. a future mechanism's
+    state arrays) pass through as numpy. ``shardings`` (pytree of
+    jax.sharding or a single sharding) re-shards onto the CURRENT mesh —
     elastic restore onto a different topology than the one that saved."""
     step = latest_step(root) if step is None else step
     if step is None:
         raise FileNotFoundError(f"no valid checkpoint under {root}")
     d = _ckpt_dir(root, step)
-    with open(os.path.join(d, MANIFEST)) as f:
-        manifest = json.load(f)
-    with np.load(os.path.join(d, "arrays.npz")) as z:
-        flat = {k: z[k] for k in z.files}
-    for k, meta in manifest["arrays"].items():
-        crc = zlib.crc32(np.ascontiguousarray(flat[k]).tobytes()) & 0xFFFFFFFF
-        if crc != meta["crc"]:
-            raise IOError(f"checksum mismatch for {k} at step {step}")
-    state = unflatten(flat)
+    manifest = _manifest(root, step)
+
+    out, coverage, slice_crcs = {}, {}, {}
+    for path, info in manifest["arrays"].items():
+        out[path] = np.zeros(tuple(info["shape"]), dtype=info["dtype"])
+        coverage[path] = np.zeros(tuple(info["shape"]), dtype=bool)
+    for fname, finfo in manifest["files"].items():
+        with np.load(os.path.join(d, fname)) as z:
+            for key, e in finfo["entries"].items():
+                arr = z[key]
+                crc = zlib.crc32(np.ascontiguousarray(arr).tobytes()) \
+                    & 0xFFFFFFFF
+                if crc != e["crc"]:
+                    raise IOError(f"checksum mismatch for {key} in {fname} "
+                                  f"at step {step}")
+                path, off = e["path"], tuple(e["offset"])
+                prev = slice_crcs.setdefault((path, off), crc)
+                if prev != crc:
+                    raise IOError(
+                        f"replicated slice disagreement for {path} at "
+                        f"offset {off} (step {step})")
+                region = tuple(slice(o, o + n)
+                               for o, n in zip(off, arr.shape)) or ...
+                out[path][region] = arr
+                coverage[path][region] = True
+    holes = [p for p, c in coverage.items() if not c.all()]
+    if holes:
+        raise IOError(
+            f"incomplete shard coverage at step {step} for {sorted(holes)} "
+            "(missing process file or dropped slice)")
+
+    state = out
     if template is not None:
         tflat = flatten(template)
-        assert set(tflat) == set(flat), "checkpoint/template structure mismatch"
-        state = unflatten({k: np.asarray(flat[k]).astype(tflat[k].dtype)
-                           for k in flat})
+        missing = set(tflat) - set(state)
+        if missing:
+            raise IOError(f"checkpoint at step {step} lacks template keys "
+                          f"{sorted(missing)}")
+        state = {k: (state[k].astype(tflat[k].dtype) if k in tflat
+                     else state[k]) for k in state}
     if shardings is not None:
         sflat = flatten(shardings) if isinstance(shardings, dict) else None
-        state = unflatten({
-            k: jax.device_put(v, sflat[k] if sflat else shardings)
-            for k, v in flatten(state).items()})
-    return state, manifest["step"]
+        state = {k: jax.device_put(v, sflat[k] if sflat else shardings)
+                 for k, v in state.items()}
+    return unflatten(state), manifest["step"], manifest.get("meta", {})
 
 
 def _gc(root: str, keep: int):

@@ -1,0 +1,119 @@
+"""Versioned RunState schema: everything a privacy-exact restart needs.
+
+A checkpoint is privacy-exact when the resumed run is indistinguishable —
+to the DP adversary observing released noisy quantities — from the run
+that never crashed. That needs more than params: the full RunState is
+
+    array payload (process-sliced npz, see checkpoint.checkpoint)
+      params        model parameters
+      opt           optimizer state (for DP-FTRL: the anchor ``theta0``,
+                    noisy gradient prefix ``sum``, momentum ``m`` — i.e.
+                    the tree position is (opt state, absolute step))
+      step          last completed absolute step (scalar)
+      rng           the BASE PRNG key of the TrainState — each step folds
+                    its own index in, so (rng, step) replays the exact
+                    per-step key sequence
+
+    manifest meta (json, this module's schema)
+      run_state_version   schema version (this file: 1)
+      noise               NoiseMechanism.state_dict() — mechanism kind +
+                          the config that keys its draws (tree seed,
+                          restart period, completion flag)
+      ledger              PrivacyLedger.to_json() — absolute steps
+                          accounted + sigma / sampling / mechanism history
+      pipeline            Pipeline.state_dict() — the generative config;
+                          the cursor itself IS the step (batch(step) is a
+                          pure function)
+      config              run-config fingerprint for drift detection
+
+On resume, drift in a PRIVACY_CRITICAL config key raises (continuing would
+change the release the ledger claims to account); any other drift only
+warns (e.g. extending ``steps`` is a legitimate continuation — the ledger
+keeps counting). The noise mechanism and pipeline validate their own
+state via ``load_state`` and raise on drift themselves.
+"""
+from __future__ import annotations
+
+import hashlib
+
+import jax
+import numpy as np
+
+from repro.core.accounting import PrivacyLedger
+from repro.utils.tree import flatten
+
+RUN_STATE_VERSION = 1
+
+# Resuming with any of these changed alters the mechanism mid-release: the
+# per-step keys (seed), the noise magnitude (sigma), the sensitivity unit
+# and sampling (global_batch), the optimizer consuming the release, or the
+# epoch structure of the tree (restart_every). The ledger's past entries
+# would then describe a different mechanism than the one continuing.
+PRIVACY_CRITICAL = ("seed", "sigma", "global_batch", "optimizer",
+                    "restart_every", "noise", "mode")
+
+
+def config_fingerprint(tc, policy, restart_every: int) -> dict:
+    """The drift-detection view of a run config (json-able scalars only)."""
+    return {
+        "seed": int(tc.seed),
+        "sigma": float(policy.sigma),
+        "global_batch": int(tc.global_batch),
+        "optimizer": str(tc.optimizer),
+        "restart_every": int(restart_every),
+        "noise": str(policy.noise),
+        "mode": str(policy.mode),
+        "steps": int(tc.steps),
+        "seq_len": int(tc.seq_len),
+        "lr": float(tc.lr),
+        "microbatch": int(tc.microbatch),
+    }
+
+
+def pack_meta(mechanism, ledger: PrivacyLedger, pipeline,
+              config: dict) -> dict:
+    """The manifest-meta half of a RunState checkpoint."""
+    return {
+        "run_state_version": RUN_STATE_VERSION,
+        "noise": mechanism.state_dict(),
+        "ledger": ledger.to_json(),
+        "pipeline": pipeline.state_dict(),
+        "config": config,
+    }
+
+
+def check_resume(meta: dict, mechanism, pipeline, config: dict,
+                 log=print) -> PrivacyLedger:
+    """Validate a checkpoint's meta against the resuming run and return the
+    restored ledger. Raises on privacy-critical drift; warns otherwise."""
+    version = meta.get("run_state_version")
+    if version != RUN_STATE_VERSION:
+        raise ValueError(
+            f"checkpoint run_state_version={version!r}; this build resumes "
+            f"version {RUN_STATE_VERSION}")
+    mechanism.load_state(meta["noise"])
+    pipeline.load_state(meta["pipeline"])
+    saved = meta.get("config", {})
+    drift = {k: (saved.get(k), config[k]) for k in config
+             if k in saved and saved[k] != config[k]}
+    critical = {k: v for k, v in drift.items() if k in PRIVACY_CRITICAL}
+    if critical:
+        raise ValueError(
+            "privacy-critical config drift between checkpoint and resumed "
+            "run (checkpointed != configured): "
+            + ", ".join(f"{k}: {a!r} != {b!r}"
+                        for k, (a, b) in sorted(critical.items())))
+    for k, (a, b) in sorted(drift.items()):
+        log(f"resume config drift (non-critical) {k}: {a!r} -> {b!r}")
+    return PrivacyLedger.from_json(meta.get("ledger"))
+
+
+def params_digest(params) -> str:
+    """Order-stable sha256 over every parameter's bytes — the bitwise
+    restart-parity witness the elastic-restart tests and the CI crash/resume
+    stage compare."""
+    h = hashlib.sha256()
+    for path in sorted(flat := flatten(params)):
+        h.update(path.encode())
+        h.update(np.ascontiguousarray(jax.device_get(flat[path])).tobytes())
+    return h.hexdigest()

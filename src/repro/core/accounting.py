@@ -135,6 +135,142 @@ class PrivacyBudget:
     mechanism: str = "sgm"       # 'sgm' (subsampled Gaussian) | 'tree'
 
 
+# ------------------------------------------------------------ spent-budget ledger
+@dataclass(frozen=True)
+class LedgerEntry:
+    """One contiguous run segment accounted at fixed mechanism parameters."""
+    steps: int
+    sigma: float
+    sample_rate: float
+    mechanism: str = "sgm"       # 'sgm' | 'tree'
+    restart_every: int = 0       # tree only
+    participations: int = 1      # tree only
+
+    def same_release(self, other: "LedgerEntry") -> bool:
+        return (self.sigma, self.sample_rate, self.mechanism,
+                self.restart_every) == \
+               (other.sigma, other.sample_rate, other.mechanism,
+                other.restart_every)
+
+
+class PrivacyLedger:
+    """Restart-safe spent-budget ledger.
+
+    The ledger records which ABSOLUTE training steps have been accounted
+    (``recorded_to`` = steps [0, recorded_to) are covered) together with the
+    mechanism parameters in force over each contiguous segment. It is
+    persisted inside every checkpoint (``checkpoint.run_state``) and resumed
+    verbatim, so a mid-run restart reports epsilon for the WHOLE run, never
+    "as if the run had just begun".
+
+    ``record_to(step_end, ...)`` is idempotent over replayed steps: a crash
+    after step k ran but before a checkpoint recorded it means the resumed
+    run re-executes step k — but because every noise draw in this engine is
+    a pure function of (seed, step) (counter-based Gaussian draws, fixed
+    tree-node seeds), the re-executed step releases BITWISE the same
+    randomness as the lost one. The adversary's view is identical to the
+    uninterrupted run's, so counting each absolute step exactly once is the
+    exact accounting, with neither leakage (no fresh noise reuse against a
+    second query) nor double-counting (no budget charged twice for one
+    release). Re-recording an already-covered range is therefore a no-op.
+
+    Composition: 'sgm' segments compose additively in RDP (heterogeneous
+    sigma across segments is honest composition). Contiguous 'tree'
+    segments with identical (sigma, restart_every) are MERGED before
+    accounting — they are one continued tree release whose node count grows
+    with the total horizon (splitting them would re-count the shared
+    near-root nodes); parameter changes start a new release, composed
+    additively (an upper bound).
+    """
+
+    VERSION = 1
+
+    def __init__(self, entries=(), recorded_to: int = 0):
+        self.entries = [e if isinstance(e, LedgerEntry) else LedgerEntry(**e)
+                        for e in entries]
+        self.recorded_to = int(recorded_to)
+        if sum(e.steps for e in self.entries) != self.recorded_to:
+            raise ValueError(
+                f"ledger entries cover {sum(e.steps for e in self.entries)} "
+                f"steps but recorded_to={self.recorded_to}")
+
+    def record_to(self, step_end: int, sigma: float, sample_rate: float,
+                  mechanism: str = "sgm", restart_every: int = 0,
+                  participations: int = 1) -> int:
+        """Account steps [recorded_to, step_end); returns how many were new.
+        ``step_end <= recorded_to`` (a replay after restart) is a no-op."""
+        if mechanism not in ("sgm", "tree"):
+            raise ValueError(f"unknown ledger mechanism {mechanism!r}")
+        delta = int(step_end) - self.recorded_to
+        if delta <= 0:
+            return 0
+        entry = LedgerEntry(delta, float(sigma), float(sample_rate),
+                            mechanism, int(restart_every),
+                            int(participations))
+        if self.entries and self.entries[-1].same_release(entry):
+            last = self.entries[-1]
+            self.entries[-1] = LedgerEntry(
+                last.steps + delta, last.sigma, last.sample_rate,
+                last.mechanism, last.restart_every,
+                max(last.participations, entry.participations))
+        else:
+            self.entries.append(entry)
+        self.recorded_to = int(step_end)
+        return delta
+
+    def epsilon(self, delta: float, orders=DEFAULT_ORDERS) -> float:
+        """(eps, delta) spent over every recorded step, composing segment
+        RDP curves at shared orders and converting once."""
+        if not self.entries:
+            return 0.0
+        orders = np.asarray(orders, dtype=np.float64)
+        rdp = np.zeros_like(orders)
+        for e in self._merged():
+            if e.sigma <= 0.0:
+                return float("inf")
+            if e.mechanism == "tree":
+                m = tree_node_count(e.steps, e.restart_every,
+                                    e.participations)
+                rdp = rdp + orders * m / (2.0 * e.sigma * e.sigma)
+            else:
+                rdp = rdp + np.array(
+                    [e.steps * rdp_sgm(e.sample_rate, e.sigma, a)
+                     for a in orders])
+        return rdp_to_eps(rdp, orders, delta)
+
+    def _merged(self):
+        """Entries with contiguous same-release tree segments fused (the
+        constructor/record_to already fuse; kept for from_json of hand-built
+        histories)."""
+        out = []
+        for e in self.entries:
+            if out and e.mechanism == "tree" and out[-1].same_release(e):
+                last = out[-1]
+                out[-1] = LedgerEntry(last.steps + e.steps, last.sigma,
+                                      last.sample_rate, last.mechanism,
+                                      last.restart_every,
+                                      max(last.participations,
+                                          e.participations))
+            else:
+                out.append(e)
+        return out
+
+    def to_json(self) -> dict:
+        return {"version": self.VERSION, "recorded_to": self.recorded_to,
+                "entries": [vars(e) for e in self.entries]}
+
+    @classmethod
+    def from_json(cls, data) -> "PrivacyLedger":
+        if data is None:
+            return cls()
+        if int(data.get("version", 0)) != cls.VERSION:
+            raise ValueError(
+                f"unknown ledger version {data.get('version')!r} "
+                f"(this build reads version {cls.VERSION})")
+        return cls(entries=data.get("entries", ()),
+                   recorded_to=data.get("recorded_to", 0))
+
+
 # ------------------------------------------------- tree-aggregation accountant
 def tree_node_count(steps: int, restart_every: int = 0,
                     participations: int = 1) -> int:

@@ -7,6 +7,24 @@ A ``NoiseMechanism`` is any object with
 
     add(flat_grads, rng, sigma, sensitivity, denom, step=None) -> dict
 
+plus the restart hooks
+
+    state_dict() -> dict      # everything a privacy-exact restart needs
+    load_state(state) -> None # restore/validate; raise ValueError on drift
+
+State dicts are persisted inside every checkpoint (``checkpoint.run_state``)
+and replayed at resume BEFORE the first restored step runs. Both mechanisms
+here are counter-based — their noise at step t is a pure function of
+(seed, path, t) — so their restorable state is exactly their configuration,
+and ``load_state`` is a drift guard: resuming with a different node seed,
+restart period or completion flag would silently put the run on a fresh
+noise path (re-drawing noise the adversary has already seen answered
+differently — a privacy violation, not just a reproducibility bug), so it
+raises instead. A future *stateful* mechanism (e.g. banded matrix
+factorization holding an O(band) buffer) returns its buffers as numpy
+arrays inside ``state_dict``; the RunState packer stores array-valued
+entries in the sliced checkpoint payload and round-trips them bitwise.
+
 returning ``(G + sigma * scale * xi) / denom`` per leaf, where ``scale`` is
 either one L2 sensitivity shared by every leaf (a bare R for flat clipping,
 the policy's composed sensitivity for group-wise clipping) or a
@@ -228,6 +246,18 @@ class GaussianMechanism:
                  restart_every: int = 0, completion: bool = False):
         del seed, depth, restart_every, completion  # stateless: per-step rng
 
+    def state_dict(self) -> dict:
+        """Per-step noise is keyed off the step rng the TrainState already
+        persists — the mechanism itself carries no restorable state."""
+        return {"name": self.name}
+
+    def load_state(self, state: dict) -> None:
+        if state.get("name") != self.name:
+            raise ValueError(
+                f"checkpoint noise state is {state.get('name')!r} but the "
+                f"resumed run configures {self.name!r} — resuming would "
+                "switch the noise mechanism mid-release")
+
     def add_leaf(self, path: str, g, rng, sigma: float, scale,
                  denom: float, step=None, mesh=None, spec=None):
         """One leaf of ``add`` — the fused noise+optimizer path consumes
@@ -298,6 +328,32 @@ class TreeAggregationMechanism:
                 f"depth {depth} cannot cover the per-epoch horizon "
                 f"{next_pow2(self.restart_every)} (restart_every="
                 f"{self.restart_every})")
+
+    def state_dict(self) -> dict:
+        """The tree's node noise is a pure function of (seed, path, epoch,
+        level, index), so the restorable state is the configuration that
+        keys it. Depth is deliberately EXCLUDED: node draws are
+        depth-invariant (levels above the prefix contribute i&1 == 0), so
+        depth is a draw-cost knob, not part of the noise path."""
+        return {"name": self.name, "seed": self.seed,
+                "restart_every": self.restart_every,
+                "completion": self.completion}
+
+    def load_state(self, state: dict) -> None:
+        """Validate that this mechanism continues the checkpointed release.
+        A mismatched seed re-draws every released node; a mismatched
+        restart period or completion flag shifts every epoch boundary —
+        either silently voids the restart-exactness guarantee, so both
+        raise."""
+        mine = self.state_dict()
+        drift = {k: (state.get(k), mine[k]) for k in mine
+                 if state.get(k) != mine[k]}
+        if drift:
+            raise ValueError(
+                "tree-noise state drift between checkpoint and resumed run "
+                "(checkpointed != configured): "
+                + ", ".join(f"{k}: {a!r} != {b!r}"
+                            for k, (a, b) in sorted(drift.items())))
 
     def _node(self, path: str, level: int, idx, epoch=0):
         k = _path_rng(jax.random.PRNGKey(self.seed), path)

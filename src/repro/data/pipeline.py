@@ -38,6 +38,30 @@ class Pipeline:
     def spec(self):
         return batch_spec(self.model_cfg, self.cfg.batch, self.cfg.seq_len)
 
+    def state_dict(self) -> dict:
+        """Restorable pipeline state for the RunState checkpoint. Because
+        ``batch(step)`` is a pure function, the cursor is the train step the
+        caller already persists — what must round-trip here is the
+        GENERATIVE config, so a resumed run that would silently produce
+        different batches (different seed / batch / sampling) is caught."""
+        return {"seed": self.cfg.seed, "batch": self.cfg.batch,
+                "seq_len": self.cfg.seq_len,
+                "poisson_q": self.cfg.poisson_q}
+
+    def load_state(self, state: dict) -> None:
+        """Validate that this pipeline continues the checkpointed stream;
+        raises on drift (a changed seed or batch size re-samples the data,
+        voiding both bitwise resume parity and the accounted sample rate)."""
+        mine = self.state_dict()
+        drift = {k: (state.get(k), mine[k]) for k in mine
+                 if state.get(k) != mine[k]}
+        if drift:
+            raise ValueError(
+                "data-pipeline state drift between checkpoint and resumed "
+                "run (checkpointed != configured): "
+                + ", ".join(f"{k}: {a!r} != {b!r}"
+                            for k, (a, b) in sorted(drift.items())))
+
     def batch(self, step: int) -> dict:
         b = make_batch(self.model_cfg, self.cfg.batch, self.cfg.seq_len,
                        seed=self.cfg.seed, step=step)

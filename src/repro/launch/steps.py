@@ -45,6 +45,26 @@ jax.tree_util.register_dataclass(
     meta_fields=())
 
 
+def init_train_state(params, opt_state, step: int, rng,
+                     state_sh=None) -> TrainState:
+    """Assemble the donated TrainState (fresh init or checkpoint resume),
+    placing params/opt_state against the step's shardings when given.
+
+    ``rng`` is the BASE key (raw uint32[2]); a resumed run passes the
+    CHECKPOINTED key here verbatim — the step function folds the absolute
+    step into it, so handing back the same base key replays the exact
+    per-step key sequence the interrupted run would have used."""
+    state = TrainState(params=params, opt_state=opt_state,
+                       step=jnp.asarray(step, jnp.int32),
+                       rng=jnp.asarray(rng, jnp.uint32))
+    if state_sh is not None:
+        state = TrainState(
+            params=jax.device_put(state.params, state_sh.params),
+            opt_state=jax.device_put(state.opt_state, state_sh.opt_state),
+            step=state.step, rng=state.rng)
+    return state
+
+
 def make_train_step(apply_fn, params_like, opt, opt_name: str, dp,
                     microbatch: int, mesh, batch_like):
     """-> (step_fn, state_shardings, batch_shardings).

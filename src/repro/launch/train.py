@@ -24,25 +24,30 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import functools
+import json
+import math
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import run_state as rs
 from repro.configs.base import TrainConfig
 from repro.configs.registry import (build, get_config, get_policy, has_policy,
                                     list_archs, list_policies, smoke_config)
-from repro.core.accounting import budget_for
+from repro.core.accounting import PrivacyLedger, budget_for
 from repro.core.bk import DPConfig
 from repro.core.policy import as_policy, resolve_policy
 from repro.core.tape import Tape, parse_key
 from repro.data.pipeline import Pipeline, PipelineConfig
 from repro.launch import sharding as sh
 from repro.launch.mesh import make_train_mesh
-from repro.launch.steps import TrainState, make_train_step
+from repro.launch.steps import (TrainState, init_train_state,
+                                make_train_step)
 from repro.optim.optimizers import make_optimizer
 from repro.optim.schedules import make_schedule
+from repro.runtime.fault_injection import maybe_fault
 from repro.runtime.fault_tolerance import (CheckpointManager, Heartbeat,
                                            PreemptionGuard)
 from repro.utils.tree import flatten
@@ -188,7 +193,7 @@ def autotune_warmup(apply_fn, params, batch, dp, log=print) -> int:
 
 def train(model_cfg, tc: TrainConfig, dp, log=print,
           dataset_size: int = 0, target_epsilon: float = 0.0,
-          delta: float = 1e-5):
+          delta: float = 1e-5, summary_out=None):
     model = build(model_cfg)
     if tc.tape or tc.tape_chunks:
         # --tape/--tape-chunks override whatever the DPConfig / preset set
@@ -293,7 +298,9 @@ def train(model_cfg, tc: TrainConfig, dp, log=print,
             f"noise_depth={final_policy.noise_depth} covers only "
             f"{(1 << final_policy.noise_depth) - 1} steps but the run has "
             f"{tc.steps}; raise noise_depth or set restarts")
-    final_policy.mechanism()  # surface mechanism config errors before init
+    # surface mechanism config errors before init; the bound instance also
+    # carries the restorable noise state the RunState checkpoint persists
+    mech = final_policy.mechanism()
 
     opt_kw = ({"momentum": tc.ftrl_momentum,
                "restart_every": ftrl_restart}
@@ -305,23 +312,53 @@ def train(model_cfg, tc: TrainConfig, dp, log=print,
                                               seed=tc.seed))
 
     guard = PreemptionGuard()
-    hb = Heartbeat(timeout_s=600.0)
+
+    def on_stall(report):
+        # a hung step can't be checkpointed from here (its state is inside
+        # the collective), but requesting a stop means the loop — if it
+        # ever returns — force-saves before exit instead of running on
+        log(report.describe() + "; requesting graceful stop + checkpoint")
+        guard.request_stop()
+
+    hb = Heartbeat(timeout_s=600.0, on_stall=on_stall)
     mgr = (CheckpointManager(tc.checkpoint_dir, every=tc.checkpoint_every,
                              keep=tc.keep_checkpoints)
            if tc.checkpoint_dir else None)
+
+    # ---- privacy ledger (absolute steps accounted, resumed verbatim) --------
+    mech_kind = "tree" if final_policy.noise == "tree" else "sgm"
+    sample_rate = (tc.global_batch / dataset_size if dataset_size > 0
+                   else 1.0)
+    ledger_restart = ftrl_restart or final_policy.noise_restart_every
+    participations = (max(1, math.ceil(tc.steps * tc.global_batch
+                                       / dataset_size))
+                      if dataset_size > 0 else 1)
+    ledger_kw = dict(sigma=float(final_policy.sigma),
+                     sample_rate=sample_rate, mechanism=mech_kind,
+                     restart_every=ledger_restart,
+                     participations=participations)
+    ledger = PrivacyLedger()
+    fingerprint = rs.config_fingerprint(tc, final_policy, ftrl_restart)
 
     # ---- init or resume -----------------------------------------------------
     start = 0
     params = model.init(jax.random.PRNGKey(tc.seed))
     opt_state = opt.init(params)
+    base_rng = jax.random.PRNGKey(tc.seed + 1)
     if mgr is not None:
-        state, step = mgr.resume(template={"params": params,
-                                           "opt": opt_state,
-                                           "step": np.asarray(0)})
-        if state is not None:
-            params, opt_state = state["params"], state["opt"]
-            start = int(state["step"]) + 1
-            log(f"resumed from step {start - 1}")
+        state0, step0, meta0 = mgr.resume(template={"params": params,
+                                                    "opt": opt_state,
+                                                    "step": np.asarray(0),
+                                                    "rng": base_rng})
+        if state0 is not None:
+            # validates noise/pipeline/config against the checkpoint and
+            # raises on privacy-critical drift; restores the spent ledger
+            ledger = rs.check_resume(meta0, mech, pipe, fingerprint, log=log)
+            params, opt_state = state0["params"], state0["opt"]
+            base_rng = state0["rng"]
+            start = step0 + 1
+            log(f"resumed from step {step0} "
+                f"(ledger covers {ledger.recorded_to} steps)")
 
     # ---- warmup: measured kernel autotune on the real tap shapes ------------
     if tc.autotune == "on" or (tc.autotune == "auto"
@@ -340,15 +377,17 @@ def train(model_cfg, tc: TrainConfig, dp, log=print,
         pipe.batch(0))
     jitted = jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
                      out_shardings=(state_sh, None), donate_argnums=(0,))
-    state = TrainState(params=jax.device_put(params, state_sh.params),
-                       opt_state=jax.device_put(opt_state,
-                                                state_sh.opt_state),
-                       step=jnp.asarray(start, jnp.int32),
-                       rng=jax.random.PRNGKey(tc.seed + 1))
+    # base_rng is the CHECKPOINTED key on resume: per-step keys fold the
+    # absolute step into it, so restoring it replays the interrupted run's
+    # exact noise sequence (the bitwise-restart guarantee)
+    state = init_train_state(params, opt_state, start, base_rng, state_sh)
 
     def snapshot(s: TrainState, step: int) -> dict:
         return {"params": s.params, "opt": s.opt_state,
-                "step": np.asarray(step)}
+                "step": np.asarray(step), "rng": s.rng}
+
+    def run_meta() -> dict:
+        return rs.pack_meta(mech, ledger, pipe, fingerprint)
 
     # losses stay on device; the buffer drains every log_every steps and at
     # exit — no step blocks on a device->host sync
@@ -370,15 +409,21 @@ def train(model_cfg, tc: TrainConfig, dp, log=print,
 
     with mesh:
         for step in range(start, tc.steps):
+            maybe_fault("step", step)  # crash/preemption injection (tests)
             batch = jax.device_put(pipe.batch(step), batch_sh)
             state, loss = jitted(state, batch)
             pending.append(loss)
             hb.beat(step)
-            saved = (mgr.maybe_save(step, snapshot(state, step))
+            # every executed absolute step is accounted exactly once —
+            # resumed replays are no-ops (ledger.record_to is idempotent)
+            ledger.record_to(step + 1, **ledger_kw)
+            saved = (mgr.maybe_save(step, snapshot(state, step),
+                                    meta=run_meta())
                      if mgr is not None else False)
             if guard.should_stop():
                 if mgr is not None and not saved:
-                    mgr.maybe_save(step, snapshot(state, step), force=True)
+                    mgr.maybe_save(step, snapshot(state, step), force=True,
+                                   meta=run_meta())
                 flush(step)
                 log(f"preempted at step {step}; checkpoint saved")
                 break
@@ -388,6 +433,22 @@ def train(model_cfg, tc: TrainConfig, dp, log=print,
     if mgr is not None:
         mgr.wait()
     hb.close()
+
+    epsilon = None
+    if final_policy.mode != "nonprivate" and ledger.recorded_to > 0:
+        epsilon = ledger.epsilon(delta)
+        log(f"privacy spent: eps={epsilon:.4g} (delta={delta:g}) over "
+            f"{ledger.recorded_to} accounted steps "
+            f"[{mech_kind}{' restarts' if ledger_restart else ''}]")
+    if summary_out is not None:
+        summary_out.update({
+            "steps_done": ledger.recorded_to,
+            "resumed_from": start,
+            "epsilon": epsilon,
+            "delta": delta,
+            "params_sha256": rs.params_digest(state.params),
+            "ledger": ledger.to_json(),
+        })
     return jax.device_get(state.params), losses
 
 
@@ -450,6 +511,10 @@ def main():
                     help="loss log + device->host flush period in steps")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--out", default="",
+                    help="write a json run summary (steps done, epsilon, "
+                         "params sha256, ledger) — the CI crash/resume "
+                         "stage compares these across runs")
     args = ap.parse_args()
 
     mesh_data, mesh_model = 0, 1
@@ -480,8 +545,13 @@ def main():
                      checkpoint_every=args.ckpt_every)
     dp = resolve_dp(args.arch, args.policy, args.mode, args.clipping,
                     args.sigma)
+    summary = {} if args.out else None
     train(mc, tc, dp, dataset_size=args.dataset_size,
-          target_epsilon=args.epsilon)
+          target_epsilon=args.epsilon, summary_out=summary)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(summary, f, indent=2)
+        print(f"summary written to {args.out}")
 
 
 if __name__ == "__main__":

@@ -36,6 +36,18 @@ from repro.optim.optimizers import Optimizer, _materialized, _tmap
 F32 = jnp.float32
 
 
+def epoch_of(step: int, restart_every: int) -> int:
+    """Which restart epoch (tree index) absolute ``step`` falls in.
+
+    The FTRL/tree 'position' needs no dedicated checkpoint field: the
+    optimizer state carries (anchor, prefix, momentum) and the epoch — both
+    the anchor's rebase boundary and the noise tree's index — is this pure
+    function of the ABSOLUTE step, which the TrainState persists. Resuming
+    mid-epoch is exact because ``_restart_keep`` and the tree mechanism
+    both key off that same absolute step."""
+    return int(step) // restart_every if restart_every > 0 else 0
+
+
 def ftrl(lr_fn, momentum: float = 0.0, restart_every: int = 0,
          weight_decay: float = 0.0) -> Optimizer:
     """Momentum DP-FTRL. ``weight_decay`` must be 0: FTRL's iterate is an

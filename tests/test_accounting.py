@@ -103,3 +103,81 @@ def test_tree_calibration_roundtrip_and_no_amplification():
 def test_budget_for_rejects_unknown_mechanism():
     with pytest.raises(ValueError):
         budget_for(3.0, 1e-5, 64, 50000, 1.0, mechanism="nope")
+
+
+# ------------------------------------------------------------------- ledger
+def test_ledger_matches_direct_accountants():
+    from repro.core.accounting import (PrivacyLedger, compute_epsilon_tree)
+    led = PrivacyLedger()
+    led.record_to(500, sigma=1.0, sample_rate=0.01)
+    np.testing.assert_allclose(led.epsilon(1e-5),
+                               compute_epsilon(1.0, 0.01, 500, 1e-5),
+                               rtol=1e-9)
+    led = PrivacyLedger()
+    led.record_to(64, sigma=2.0, sample_rate=1.0, mechanism="tree",
+                  restart_every=16)
+    np.testing.assert_allclose(led.epsilon(1e-5),
+                               compute_epsilon_tree(2.0, 64, 1e-5,
+                                                    restart_every=16),
+                               rtol=1e-9)
+
+
+def test_ledger_replay_is_idempotent():
+    """Re-recording already-covered absolute steps (a restart replaying the
+    lost tail) must not double-count budget."""
+    from repro.core.accounting import PrivacyLedger
+    led = PrivacyLedger()
+    led.record_to(100, sigma=1.0, sample_rate=0.01)
+    eps = led.epsilon(1e-5)
+    assert led.record_to(80, sigma=1.0, sample_rate=0.01) == 0  # replay
+    assert led.record_to(100, sigma=1.0, sample_rate=0.01) == 0
+    assert led.epsilon(1e-5) == eps
+    assert led.record_to(120, sigma=1.0, sample_rate=0.01) == 20
+    assert led.epsilon(1e-5) > eps
+
+
+def test_ledger_tree_segments_merge_as_one_release():
+    """A tree release split across restarts must account like the unsplit
+    run (same continued tree), not like two composed releases."""
+    from repro.core.accounting import PrivacyLedger
+    whole = PrivacyLedger()
+    whole.record_to(64, sigma=2.0, sample_rate=1.0, mechanism="tree",
+                    restart_every=16)
+    split = PrivacyLedger()
+    split.record_to(40, sigma=2.0, sample_rate=1.0, mechanism="tree",
+                    restart_every=16)
+    split.record_to(64, sigma=2.0, sample_rate=1.0, mechanism="tree",
+                    restart_every=16)
+    np.testing.assert_allclose(split.epsilon(1e-5), whole.epsilon(1e-5),
+                               rtol=1e-12)
+    # a sigma change is a NEW release: composes additively, costs more
+    hetero = PrivacyLedger()
+    hetero.record_to(40, sigma=2.0, sample_rate=1.0, mechanism="tree",
+                     restart_every=16)
+    hetero.record_to(64, sigma=1.0, sample_rate=1.0, mechanism="tree",
+                     restart_every=16)
+    assert hetero.epsilon(1e-5) > whole.epsilon(1e-5)
+    assert len(hetero.entries) == 2
+
+
+def test_ledger_json_roundtrip_and_version_gate():
+    from repro.core.accounting import PrivacyLedger
+    led = PrivacyLedger()
+    led.record_to(10, sigma=1.0, sample_rate=0.1)
+    led.record_to(30, sigma=0.5, sample_rate=0.1)
+    back = PrivacyLedger.from_json(led.to_json())
+    assert back.recorded_to == 30 and back.entries == led.entries
+    np.testing.assert_allclose(back.epsilon(1e-5), led.epsilon(1e-5))
+    assert PrivacyLedger.from_json(None).recorded_to == 0
+    with pytest.raises(ValueError, match="version"):
+        PrivacyLedger.from_json({"version": 99})
+    with pytest.raises(ValueError, match="cover"):
+        PrivacyLedger(entries=[{"steps": 5, "sigma": 1.0,
+                                "sample_rate": 0.1}], recorded_to=9)
+
+
+def test_ledger_zero_sigma_is_infinite():
+    from repro.core.accounting import PrivacyLedger
+    led = PrivacyLedger()
+    led.record_to(5, sigma=0.0, sample_rate=0.1)
+    assert led.epsilon(1e-5) == float("inf")

@@ -1,0 +1,261 @@
+"""Elastic-restart acceptance tests: fault-injected training subprocesses
+(SIGKILL at a step, SIGKILL mid-checkpoint-write, SIGTERM preemption) must
+resume to BITWISE-identical final params and IDENTICAL reported epsilon vs
+an uninterrupted reference — for both the SGD/gaussian and FTRL/tree-noise
+paths — and process-sliced checkpoints must restore onto a different
+device count.
+
+Each training run is the real CLI driver (``repro.launch.train.main``) in a
+subprocess, with faults injected through the ``REPRO_FAULT`` env channel
+(runtime.fault_injection) — the exact production command line, crashed and
+restarted the way a scheduler would."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.runtime import fault_injection as fi
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = {"PYTHONPATH": "src"}
+STEPS = 8
+
+
+def _train_code(ckpt_dir: str, out: str, steps: int = STEPS,
+                optimizer: str = "sgd", extra=()) -> str:
+    argv = ["--arch", "qwen2-1.5b", "--smoke", "--steps", str(steps),
+            "--batch", "4", "--seq", "16", "--lr", "1e-3",
+            "--optimizer", optimizer, "--mode", "bk", "--policy", "",
+            "--sigma", "0.5", "--log-every", "100",
+            "--ckpt-dir", ckpt_dir, "--ckpt-every", "2", "--out", out]
+    if optimizer == "ftrl":
+        argv += ["--restart-every", "4"]
+    argv += list(extra)
+    return (f"import sys\nsys.argv = ['train'] + {argv!r}\n"
+            "from repro.launch.train import main\nmain()\n")
+
+
+def _run_train(ckpt_dir, out, fault=None, env=ENV, **kw):
+    r = fi.run_subprocess(_train_code(str(ckpt_dir), str(out), **kw),
+                          fault=fault, env=env, cwd=ROOT)
+    return r
+
+
+def _summary(out) -> dict:
+    with open(out) as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="module")
+def reference(tmp_path_factory):
+    """Uninterrupted runs (one per optimizer path): the ground truth the
+    crashed-and-resumed runs must reproduce bitwise."""
+    refs = {}
+    for opt in ("sgd", "ftrl"):
+        d = tmp_path_factory.mktemp(f"ref_{opt}")
+        _run_train(d / "ck", d / "out.json", optimizer=opt)
+        refs[opt] = _summary(d / "out.json")
+        assert refs[opt]["steps_done"] == STEPS
+        assert refs[opt]["resumed_from"] == 0
+        assert np.isfinite(refs[opt]["epsilon"])
+    return refs
+
+
+@pytest.mark.parametrize("opt,kill_step", [("sgd", 5), ("ftrl", 6)])
+def test_sigkill_resume_bitwise(tmp_path, reference, opt, kill_step):
+    """SIGKILL mid-run, resume, finish: final params bitwise-identical and
+    epsilon identical to the run that never crashed. The FTRL case crosses
+    a tree/anchor restart boundary (restart_every=4) before dying."""
+    ck, out = tmp_path / "ck", tmp_path / "out.json"
+    _run_train(ck, out, optimizer=opt,
+               fault=fi.FaultSpec("step", kill_step, "sigkill"))
+    assert not os.path.exists(out)              # died before the summary
+    assert ckpt.latest_step(str(ck)) is not None
+    _run_train(ck, out, optimizer=opt)          # restart: same command line
+    got = _summary(out)
+    assert got["resumed_from"] > 0              # really resumed, not re-ran
+    assert got["steps_done"] == STEPS
+    assert got["params_sha256"] == reference[opt]["params_sha256"]
+    assert got["epsilon"] == reference[opt]["epsilon"]
+    assert got["ledger"]["recorded_to"] == \
+        reference[opt]["ledger"]["recorded_to"]
+
+
+def test_sigterm_preemption_graceful_resume(tmp_path, reference):
+    """SIGTERM (scheduler preemption) takes the graceful path: the guard
+    flips, the loop force-checkpoints the current step and exits 0; the
+    restarted run continues to the same bitwise result."""
+    ck, out = tmp_path / "ck", tmp_path / "out.json"
+    r = _run_train(ck, out, fault=fi.FaultSpec("step", 3, "sigterm"))
+    assert "preempted at step 3" in r.stdout
+    assert ckpt.latest_step(str(ck)) == 3       # the forced preemption save
+    _run_train(ck, out)
+    got = _summary(out)
+    assert got["resumed_from"] == 4
+    assert got["params_sha256"] == reference["sgd"]["params_sha256"]
+    assert got["epsilon"] == reference["sgd"]["epsilon"]
+
+
+def test_sigkill_mid_checkpoint_write_resume(tmp_path, reference):
+    """SIGKILL while the checkpoint payload is being written (manifest not
+    yet on disk): the torn write must be invisible — only a .tmp dir left,
+    never a listed step — and the rerun still converges to the reference."""
+    ck, out = tmp_path / "ck", tmp_path / "out.json"
+    _run_train(ck, out, fault=fi.FaultSpec("ckpt_mid_write",
+                                           action="sigkill"))
+    assert ckpt.steps(str(ck)) == []            # nothing committed
+    assert ckpt.latest_step(str(ck)) is None
+    leftovers = os.listdir(str(ck))
+    assert leftovers and all(d.endswith(".tmp") for d in leftovers)
+    _run_train(ck, out)                         # restarts from scratch
+    got = _summary(out)
+    assert got["params_sha256"] == reference["sgd"]["params_sha256"]
+    assert got["epsilon"] == reference["sgd"]["epsilon"]
+
+
+def test_sigkill_pre_commit_leaves_no_checkpoint(tmp_path):
+    """SIGKILL after payload + manifest are fully written but before the
+    atomic rename: still no visible checkpoint, and a later save at the
+    same step clears the stale staging dir and commits cleanly."""
+    ck, out = tmp_path / "ck", tmp_path / "out.json"
+    _run_train(ck, out, fault=fi.FaultSpec("ckpt_pre_commit",
+                                           action="sigkill"))
+    assert ckpt.latest_step(str(ck)) is None
+    tmp_dirs = [d for d in os.listdir(str(ck)) if d.endswith(".tmp")]
+    assert tmp_dirs, "pre-commit kill should leave the staging dir"
+    assert os.path.exists(os.path.join(str(ck), tmp_dirs[0],
+                                       ckpt.MANIFEST))
+    # a fresh save at the same step reuses the path cleanly
+    ckpt.save(str(ck), 0, {"w": np.ones((2, 2), np.float32)})
+    assert ckpt.latest_step(str(ck)) == 0
+
+
+# ------------------------------------------------- elastic device-count moves
+def test_sliced_checkpoint_restores_on_different_device_count(tmp_path):
+    """Train on a 4-device (2 data x 2 model) mesh — the checkpoint is
+    written as per-shard slices — then restore on ONE device: the assembled
+    global params are bitwise-identical to the saving run's, and a resumed
+    training run on the new topology continues the ledger."""
+    ck, out_a = tmp_path / "ck", tmp_path / "outA.json"
+    env4 = dict(ENV, XLA_FLAGS="--xla_force_host_platform_device_count=4")
+    fi.run_subprocess(
+        _train_code(str(ck), str(out_a), steps=4,
+                    extra=["--mesh", "2,2", "--ckpt-every", "1"]),
+        env=env4, cwd=ROOT)
+    ref = _summary(out_a)
+    assert ckpt.latest_step(str(ck)) == 3
+
+    # the payload really is sliced: some slice starts at a nonzero offset
+    with open(os.path.join(str(ck), "step_0000000003",
+                           ckpt.MANIFEST)) as f:
+        manifest = json.load(f)
+    entries = [e for finfo in manifest["files"].values()
+               for e in finfo["entries"].values()]
+    assert any(any(o > 0 for o in e["offset"]) for e in entries), \
+        "expected model-sharded leaves to produce offset slices"
+
+    # single-device restore assembles the global arrays bitwise
+    code = (
+        "from repro.checkpoint import checkpoint as ckpt\n"
+        "from repro.checkpoint.run_state import params_digest\n"
+        f"state, step, meta = ckpt.restore({str(ck)!r})\n"
+        "print('STEP', step)\n"
+        "print('DIGEST', params_digest(state['params']))\n")
+    r = fi.run_subprocess(code, env=ENV, cwd=ROOT)
+    assert "STEP 3" in r.stdout
+    assert f"DIGEST {ref['params_sha256']}" in r.stdout
+
+    # and a 1-device run resumes training + the ledger from the 4-device
+    # checkpoint (different mesh shape, same privacy history)
+    out_b = tmp_path / "outB.json"
+    fi.run_subprocess(_train_code(str(ck), str(out_b), steps=6), env=ENV,
+                      cwd=ROOT)
+    got = _summary(out_b)
+    assert got["resumed_from"] == 4
+    assert got["steps_done"] == 6
+    assert np.isfinite(got["epsilon"]) and got["epsilon"] > ref["epsilon"]
+
+
+# ----------------------------------------- sliced-format unit tests (no jax)
+def _two_host_slices():
+    a = np.arange(24, dtype=np.float32).reshape(4, 6)
+    top = ckpt.ShardSlice("params/w", (0, 0), (2, 6), (4, 6), "float32",
+                          a[:2])
+    bot = ckpt.ShardSlice("params/w", (2, 0), (2, 6), (4, 6), "float32",
+                          a[2:])
+    step = ckpt.ShardSlice("step", (), (), (), "int64",
+                           np.asarray(3, np.int64))
+    return a, top, bot, step
+
+
+def test_multi_process_sliced_save_roundtrip(tmp_path):
+    """Two hosts write disjoint slice files; commit unions them; restore
+    reassembles the global array exactly."""
+    a, top, bot, step = _two_host_slices()
+    tmp = ckpt.stage_dir(str(tmp_path), 3)
+    f0, i0, m0 = ckpt.write_shard_file(tmp, 0, [top, step])
+    f1, i1, m1 = ckpt.write_shard_file(tmp, 1, [bot])
+    ckpt.commit(str(tmp_path), 3, tmp, {f0: i0, f1: i1}, {**m0, **m1},
+                meta={"k": 1}, process_count=2)
+    state, got_step, meta = ckpt.restore(str(tmp_path))
+    assert got_step == 3 and meta == {"k": 1}
+    np.testing.assert_array_equal(state["params"]["w"], a)
+    assert int(state["step"]) == 3
+
+
+def test_restore_rejects_incomplete_coverage(tmp_path):
+    """A manifest whose slices don't cover an array (lost host file) must
+    raise, never silently restore zeros."""
+    a, top, bot, step = _two_host_slices()
+    tmp = ckpt.stage_dir(str(tmp_path), 1)
+    f0, i0, m0 = ckpt.write_shard_file(tmp, 0, [top, step])
+    _, _, m1 = ckpt.write_shard_file(tmp, 1, [bot])
+    # commit lists only host 0's file but the union's global shapes
+    ckpt.commit(str(tmp_path), 1, tmp, {f0: i0}, {**m0, **m1})
+    with pytest.raises(IOError, match="coverage"):
+        ckpt.restore(str(tmp_path), step=1)
+
+
+def test_restore_rejects_crc_mismatch(tmp_path):
+    a, top, bot, step = _two_host_slices()
+    ckpt.save(str(tmp_path), 2, [top, bot, step])
+    mpath = os.path.join(str(tmp_path), "step_0000000002", ckpt.MANIFEST)
+    with open(mpath) as f:
+        manifest = json.load(f)
+    fname = next(iter(manifest["files"]))
+    key = next(iter(manifest["files"][fname]["entries"]))
+    manifest["files"][fname]["entries"][key]["crc"] ^= 0xFF
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(IOError, match="checksum"):
+        ckpt.restore(str(tmp_path), step=2)
+
+
+def test_restore_rejects_replica_disagreement(tmp_path):
+    """Two hosts claiming the same offset with different bytes is a
+    corrupted replicated leaf — restore must refuse to pick one."""
+    a, top, bot, step = _two_host_slices()
+    top2 = ckpt.ShardSlice("params/w", (0, 0), (2, 6), (4, 6), "float32",
+                           a[:2] + 1.0)
+    tmp = ckpt.stage_dir(str(tmp_path), 4)
+    f0, i0, m0 = ckpt.write_shard_file(tmp, 0, [top, bot, step])
+    f1, i1, m1 = ckpt.write_shard_file(tmp, 1, [top2])
+    ckpt.commit(str(tmp_path), 4, tmp, {f0: i0, f1: i1}, {**m0, **m1},
+                process_count=2)
+    with pytest.raises(IOError, match="disagreement"):
+        ckpt.restore(str(tmp_path), step=4)
+
+
+def test_template_subset_and_missing_key(tmp_path):
+    """Template keys must exist in the checkpoint (missing -> error); extra
+    checkpoint keys pass through untouched."""
+    ckpt.save(str(tmp_path), 5, {"a": np.ones(3, np.float32),
+                                 "extra": np.zeros(2, np.float32)})
+    state, _, _ = ckpt.restore(str(tmp_path),
+                               template={"a": np.zeros(3, np.float64)})
+    assert state["a"].dtype == np.float64       # cast to template dtype
+    assert "extra" in state                     # passes through
+    with pytest.raises(IOError, match="lacks template keys"):
+        ckpt.restore(str(tmp_path), template={"missing": np.zeros(1)})

@@ -321,7 +321,7 @@ def test_donated_step_checkpoint_safety(tmp_path):
                               "step": np.asarray(step)})
         old = state
     mgr.wait()
-    restored, rstep = ckpt.restore(str(tmp_path))
+    restored, rstep, _ = ckpt.restore(str(tmp_path))
     assert rstep == 1
     live = flatten(jax.device_get(state.params))
     for k, v in flatten(restored["params"]).items():

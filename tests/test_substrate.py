@@ -76,7 +76,7 @@ def test_checkpoint_roundtrip(tmp_path):
     model, params, _ = _setup()
     state = {"params": params, "step": jnp.asarray(7)}
     ckpt.save(str(tmp_path), 7, state)
-    restored, step = ckpt.restore(str(tmp_path))
+    restored, step, _ = ckpt.restore(str(tmp_path))
     assert step == 7
     for p, v in flatten(state).items():
         np.testing.assert_array_equal(np.asarray(v), flatten(restored)[p])
@@ -94,8 +94,8 @@ def test_checkpoint_detects_corruption(tmp_path):
     model, params, _ = _setup()
     ckpt.save(str(tmp_path), 1, {"params": params})
     ckpt.save(str(tmp_path), 2, {"params": params})
-    # corrupt step 2's npz -> latest valid falls back to step 1
-    bad = os.path.join(str(tmp_path), "step_0000000002", "arrays.npz")
+    # corrupt step 2's payload -> latest valid falls back to step 1
+    bad = os.path.join(str(tmp_path), "step_0000000002", "shards.00000.npz")
     with open(bad, "wb") as f:
         f.write(b"garbage")
     assert ckpt.latest_step(str(tmp_path)) == 1
@@ -109,7 +109,7 @@ def test_checkpoint_elastic_reshard(tmp_path):
     ckpt.save(str(tmp_path), 3, {"params": params})
     mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
     sh = NamedSharding(mesh, P())
-    restored, _ = ckpt.restore(str(tmp_path), shardings=sh)
+    restored, _, _ = ckpt.restore(str(tmp_path), shardings=sh)
     leaf = flatten(restored)["params/l0/w"]
     assert leaf.sharding == sh
 
@@ -130,7 +130,7 @@ def test_preemption_guard_and_manager(tmp_path):
             mgr.maybe_save(step, {"params": params, "step": jnp.asarray(step)},
                            force=True)
             break
-    state, step = mgr.resume()
+    state, step, _ = mgr.resume()
     assert step == 3  # the preemption save
     assert saved == [0, 2]
 
@@ -141,7 +141,9 @@ def test_heartbeat_detects_stall():
     hb.beat(0)
     time.sleep(0.5)
     hb.close()
-    assert stalls and stalls[0]["last_step"] == 0
+    assert stalls and stalls[0].last_step == 0
+    assert stalls[0].seconds_since_beat > 0.2
+    assert "stall" in stalls[0].describe()
 
 
 # ----------------------------------------------------------------- compression
